@@ -1,0 +1,69 @@
+"""Fig. 10 — Counting queries: avg / median (LLN sampling, landmark warm
+start) and max (multipass count-ranking), vs CloudOnly & PreIndexAll.
+
+Delay = time to converge within 1% of ground truth (avg/median) or to
+reach the true max."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (Profile, SceneCache, StepTimer, realtime_x,
+                               write_csv)
+from repro.core.baselines import cloud_only_count, preindex_count
+from repro.core.counting import MaxCountExecutor, SampleCountExecutor
+
+
+def run(profile: Profile, cache: SceneCache) -> List[dict]:
+    rows = []
+    for name in profile.counting_videos:
+        with StepTimer(f"fig10 counting {name}"):
+            for stat in ("mean", "median"):
+                env = cache.env(name, f"count_{stat}", profile)
+                zc2 = SampleCountExecutor(env, stat=stat).run()
+                env2 = cache.env(name, f"count_{stat}", profile)
+                co = cloud_only_count(env2, stat=stat)
+                env3 = cache.env(name, f"count_{stat}", profile)
+                pre = preindex_count(env3, stat=stat)
+                for sysname, prog in (("ZC2", zc2), ("CloudOnly", co),
+                                      ("PreIndexAll", pre)):
+                    rows.append({
+                        "video": name, "stat": stat, "system": sysname,
+                        "done_s": round(prog.done_t, 2),
+                        "final": round(prog.points[-1][1], 4),
+                        "speedup_vs_zc2": round(prog.done_t /
+                                                max(zc2.done_t, 1e-9), 1),
+                        "MB_up": round(prog.bytes_up / 1e6, 2),
+                    })
+            # max count
+            env = cache.env(name, "count_max", profile)
+            zc2 = MaxCountExecutor(env,
+                                   full_family=profile.full_family).run()
+            env2 = cache.env(name, "count_max", profile)
+            co = cloud_only_count(env2, stat="max")
+            env3 = cache.env(name, "count_max", profile)
+            pre = preindex_count(env3, stat="max")
+            for sysname, prog in (("ZC2", zc2), ("CloudOnly", co),
+                                  ("PreIndexAll", pre)):
+                rows.append({
+                    "video": name, "stat": "max", "system": sysname,
+                    "done_s": round(prog.done_t, 2),
+                    "final": round(prog.points[-1][1], 4),
+                    "speedup_vs_zc2": round(prog.done_t /
+                                            max(zc2.done_t, 1e-9), 1),
+                    "MB_up": round(prog.bytes_up / 1e6, 2),
+                })
+    return rows
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import PROFILES, print_table
+    profile = PROFILES[profile_name]
+    cache = SceneCache(profile.hours)
+    rows = run(profile, cache)
+    print_table("Fig 10: Counting query delay", rows)
+    write_csv("fig10_counting", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Fig. 11 — network traffic: ZC2 vs "all streaming", as a function of
+the fraction of captured video that eventually gets queried.
+
+All-streaming cost: every captured frame is uploaded at capture time.
+ZC2 cost: zero capture-time traffic; per queried video, one landmark
+thumbnail pull + the frames/tags the query actually uploads (measured
+from real Retrieval and Tagging executions)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Profile, SceneCache, StepTimer, write_csv
+from repro.core.filtering import TaggingExecutor
+from repro.core.ranking import RetrievalExecutor
+
+
+def run(profile: Profile, cache: SceneCache) -> List[dict]:
+    # measure per-query upload bytes on one representative video
+    name = profile.retrieval_videos[0]
+    env = cache.env(name, "retrieval", profile)
+    with StepTimer(f"fig11 traffic measurement ({name})"):
+        ret = RetrievalExecutor(env, full_family=profile.full_family).run()
+        env_t = cache.env(name, "tagging", profile)
+        tag = TaggingExecutor(env_t, full_family=profile.full_family,
+                              levels=(30, 10, 5, 2, 1)).run()
+    frame_bytes = env.net.frame_bytes
+    n_frames = env.n_frames
+    stream_bytes_per_video = n_frames * frame_bytes
+
+    rows = []
+    for queried_pct in (10, 25, 50, 100):
+        f = queried_pct / 100.0
+        # per 100 captured videos: all-streaming ships everything;
+        # ZC2 ships only the queried fraction's query traffic
+        stream = 100 * stream_bytes_per_video
+        zc2_ret = 100 * f * ret.bytes_up
+        zc2_tag = 100 * f * tag.bytes_up
+        rows.append({
+            "queried_pct": queried_pct,
+            "stream_GB": round(stream / 1e9, 2),
+            "zc2_retrieval_GB": round(zc2_ret / 1e9, 3),
+            "zc2_tagging_GB": round(zc2_tag / 1e9, 3),
+            "saving_retrieval_x": round(stream / max(zc2_ret, 1), 1),
+            "saving_tagging_x": round(stream / max(zc2_tag, 1), 1),
+        })
+    return rows
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import PROFILES, print_table
+    profile = PROFILES[profile_name]
+    cache = SceneCache(profile.hours)
+    rows = run(profile, cache)
+    print_table("Fig 11: network traffic vs all-streaming", rows)
+    write_csv("fig11_traffic", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Fig. 12 — ablation of ZC2's two key techniques:
+  Upgrade       multipass operator upgrade (§5)
+  Long-term opt spatial-skew operator crops + temporal span priority (§4)
+
+Three configurations per query, exactly the paper's:
+  full          ZC2
+  -upgrade      one operator for the whole query (retraining allowed)
+  -upgrade-opt  additionally no skew crops / span priority
+
+Videos: Chaweng (strongest spatial skew: small bicycles in 1/8 frame)
+and Ashland (weakest: trains covering 4/5 frame) — the paper's contrast
+pair for how much Long-term opt matters."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (Profile, SceneCache, StepTimer, realtime_x,
+                               write_csv)
+from repro.core.filtering import TaggingExecutor
+from repro.core.ranking import RetrievalExecutor
+
+CONFIGS = (
+    ("full", dict(use_upgrade=True, use_longterm=True)),
+    ("-upgrade", dict(use_upgrade=False, use_longterm=True)),
+    ("-upgrade-opt", dict(use_upgrade=False, use_longterm=False)),
+)
+
+
+def run(profile: Profile, cache: SceneCache, videos=None) -> List[dict]:
+    """Mierlo: sparse positives (r_pos ~ 0.06) — the regime where the
+    upgrade ladder matters; Chaweng: strongest spatial skew — where
+    long-term opt matters (the paper's own contrast, §8.3)."""
+    if videos is None:
+        videos = ("Mierlo", "Chaweng") if profile.name == "paper" \
+            else ("Mierlo",)
+    rows = []
+    for name in videos:
+        base_t90 = None
+        for label, flags in CONFIGS:
+            with StepTimer(f"fig12 retrieval {name} {label}"):
+                env = cache.env(name, "retrieval", profile)
+                prog = RetrievalExecutor(
+                    env, full_family=profile.full_family, **flags).run()
+            t90 = prog.time_to(0.9)
+            t99 = prog.time_to(0.99)
+            if label == "full":
+                base_t90 = t90
+            rows.append({
+                "video": name, "query": "retrieval", "config": label,
+                "t90_s": round(t90, 1) if t90 else None,
+                "t99_s": round(t99, 1) if t99 else None,
+                "slowdown_vs_full": round(t90 / base_t90, 2)
+                if t90 and base_t90 else None,
+                "op_switches": len(prog.op_switches),
+            })
+        base_done = None
+        for label, flags in CONFIGS:
+            with StepTimer(f"fig12 tagging {name} {label}"):
+                env = cache.env(name, "tagging", profile)
+                prog = TaggingExecutor(
+                    env, full_family=profile.full_family,
+                    levels=(30, 10, 5, 2, 1), **flags).run()
+            if label == "full":
+                base_done = prog.done_t
+            rows.append({
+                "video": name, "query": "tagging", "config": label,
+                "t90_s": None,
+                "t99_s": round(prog.done_t, 1),
+                "slowdown_vs_full": round(prog.done_t / base_done, 2)
+                if base_done else None,
+                "op_switches": len(prog.op_switches),
+            })
+    return rows
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import PROFILES, print_table
+    profile = PROFILES[profile_name]
+    cache = SceneCache(profile.hours)
+    rows = run(profile, cache)
+    print_table("Fig 12: ablation (upgrade / long-term opt)", rows)
+    write_csv("fig12_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

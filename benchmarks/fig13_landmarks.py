@@ -1,0 +1,134 @@
+"""Fig. 13 — validation of the sparse-but-sure landmark design:
+  (a) landmark ACCURACY tiers: Yv3 / Yv2 / YTiny / no landmarks at all
+  (b) landmark INTERVAL: 10 / 30 / 90 / 240 frames
+  (c) camera TIER: for a fixed camera, sparser-but-more-accurate always
+      beats denser-but-less-accurate (the §8.4 "most accurate possible"
+      rule), via the landmark_interval each tier can sustain.
+
+Queries follow the paper: Retrieval on Chaweng, Tagging on JacksonH
+(13a); 13b/13c use Retrieval (the paper's left panels) to bound host
+wall-clock. Delays are memoized per (query, video, interval, detector)."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import Profile, SceneCache, StepTimer, write_csv
+from repro.core.filtering import TaggingExecutor
+from repro.core.hardware import CAMERA_TIERS, DETECTORS, landmark_interval
+from repro.core.ranking import RetrievalExecutor
+
+LEVELS = (30, 10, 5, 2, 1)
+
+
+class _Memo:
+    def __init__(self, profile: Profile, cache: SceneCache):
+        self.profile = profile
+        self.cache = cache
+        self._d: Dict[Tuple, float] = {}
+
+    def delay(self, query: str, video: str, interval: int,
+              det: str) -> float:
+        key = (query, video, interval, det)
+        if key in self._d:
+            return self._d[key]
+        store = self.cache.empty_store(video) if det == "none" \
+            else self.cache.store(video, interval, det)
+        with StepTimer(f"fig13 {query}/{video} lm={det}@1-in-{interval}"):
+            if query == "retrieval":
+                env = self.cache.env(video, "retrieval", self.profile,
+                                     store=store)
+                prog = RetrievalExecutor(
+                    env, full_family=self.profile.full_family).run()
+                d = prog.time_to(0.99) or prog.done_t
+            else:
+                env = self.cache.env(video, "tagging", self.profile,
+                                     store=store)
+                d = TaggingExecutor(
+                    env, full_family=self.profile.full_family,
+                    levels=LEVELS).run().done_t
+        self._d[key] = d
+        return d
+
+
+def run_accuracy(memo: _Memo) -> List[dict]:
+    rows = []
+    base = {}
+    queries = (("retrieval", "Chaweng"), ("tagging", "JacksonH")) \
+        if memo.profile.name == "paper" else (("retrieval", "Chaweng"),)
+    for det in ("yolov3", "yolov2", "yolov3-tiny", "none"):
+        for query, video in queries:
+            d = memo.delay(query, video, 30, det)
+            if det == "yolov3":
+                base[query] = d
+            rows.append({
+                "landmarks": det, "query": query, "video": video,
+                "delay_s": round(d, 1),
+                "slowdown_vs_yv3": round(d / base[query], 2),
+                "map": DETECTORS[det].map_score if det in DETECTORS else 0.0,
+            })
+    return rows
+
+
+def run_interval(memo: _Memo) -> List[dict]:
+    rows = []
+    base = memo.delay("retrieval", "Chaweng", 30, "yolov3")
+    for interval in (10, 30, 90, 240):
+        d = memo.delay("retrieval", "Chaweng", interval, "yolov3")
+        rows.append({
+            "interval": interval, "query": "retrieval", "video": "Chaweng",
+            "delay_s": round(d, 1),
+            "slowdown_vs_30": round(d / base, 2),
+        })
+    return rows
+
+
+def run_camera_tiers(memo: _Memo) -> List[dict]:
+    """For each camera tier: the interval it sustains per detector, and
+    the resulting Retrieval delay — denser-but-worse vs sparser-but-sure."""
+    rows = []
+    video = "Chaweng"
+    fps = memo.cache.video(video).spec.fps
+    tiers = CAMERA_TIERS if memo.profile.name == "paper" else \
+        {k: CAMERA_TIERS[k] for k in ("rpi3", "brawny")}
+    for tier_name, tier in tiers.items():
+        per_tier = []
+        for det_name in ("yolov3", "yolov2", "yolov3-tiny"):
+            interval = landmark_interval(tier, DETECTORS[det_name], fps)
+            d = memo.delay("retrieval", video, interval, det_name)
+            per_tier.append((det_name, interval, d))
+        best = min(per_tier, key=lambda x: x[2])
+        for det_name, interval, d in per_tier:
+            rows.append({
+                "camera": tier_name, "detector": det_name,
+                "interval": interval, "delay_s": round(d, 1),
+                "is_best_for_camera": det_name == best[0],
+            })
+    return rows
+
+
+def main(profile_name: str = "standard", parts=("a", "b", "c")):
+    from benchmarks.common import PROFILES, print_table
+    profile = PROFILES[profile_name]
+    cache = SceneCache(profile.hours)
+    memo = _Memo(profile, cache)
+    out = []
+    if "a" in parts:
+        rows = run_accuracy(memo)
+        print_table("Fig 13a: landmark accuracy tiers", rows)
+        write_csv("fig13a_accuracy", rows)
+        out += rows
+    if "b" in parts:
+        rows = run_interval(memo)
+        print_table("Fig 13b: landmark intervals", rows)
+        write_csv("fig13b_interval", rows)
+        out += rows
+    if "c" in parts:
+        rows = run_camera_tiers(memo)
+        print_table("Fig 13c: camera tiers (sparse-but-sure rule)", rows)
+        write_csv("fig13c_cameras", rows)
+        out += rows
+    return out
+
+
+if __name__ == "__main__":
+    main()

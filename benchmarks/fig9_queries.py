@@ -1,0 +1,102 @@
+"""Fig. 9 — Retrieval and Tagging full-query delay + progress:
+ZC2 vs CloudOnly vs OptOp vs PreIndexAll.
+
+Per video: query delay measured as (Retrieval) time to receive 99% of
+positive frames; (Tagging) time to tag 1-in-1 frames. Also reports the
+online-progress claim (time to 50% vs 99%) and realtime multiples."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (Profile, SceneCache, StepTimer, realtime_x,
+                               write_csv)
+from repro.core.baselines import (cloud_only_retrieval, cloud_only_tagging,
+                                  optop_retrieval, optop_tagging,
+                                  preindex_retrieval, preindex_tagging)
+from repro.core.filtering import TaggingExecutor, tag_accuracy
+from repro.core.ranking import RetrievalExecutor
+
+LEVELS = (30, 10, 5, 2, 1)
+
+
+def run_retrieval(profile: Profile, cache: SceneCache) -> List[dict]:
+    rows = []
+    for name in profile.retrieval_videos:
+        with StepTimer(f"fig9 retrieval {name}"):
+            systems = {}
+            env = cache.env(name, "retrieval", profile)
+            systems["ZC2"] = (env, RetrievalExecutor(
+                env, full_family=profile.full_family).run())
+            env = cache.env(name, "retrieval", profile)
+            systems["CloudOnly"] = (env, cloud_only_retrieval(env))
+            env = cache.env(name, "retrieval", profile)
+            systems["OptOp"] = (env, optop_retrieval(
+                env, full_family=profile.full_family))
+            env = cache.env(name, "retrieval", profile)
+            systems["PreIndexAll"] = (env, preindex_retrieval(env))
+        zc2_t99 = systems["ZC2"][1].time_to(0.99)
+        for sysname, (env, prog) in systems.items():
+            t50, t90, t99 = (prog.time_to(f) for f in (0.5, 0.9, 0.99))
+            rows.append({
+                "video": name, "system": sysname,
+                "n_pos": env.n_positives,
+                "t50_s": round(t50, 1) if t50 else None,
+                "t90_s": round(t90, 1) if t90 else None,
+                "t99_s": round(t99, 1) if t99 else None,
+                "realtime_x_99": round(realtime_x(env, t99), 1) if t99
+                else None,
+                "speedup_vs_zc2": round(t99 / zc2_t99, 2)
+                if t99 and zc2_t99 else None,
+                "op_switches": len(prog.op_switches),
+                "MB_up": round(prog.bytes_up / 1e6, 1),
+            })
+    return rows
+
+
+def run_tagging(profile: Profile, cache: SceneCache) -> List[dict]:
+    rows = []
+    for name in profile.tagging_videos:
+        with StepTimer(f"fig9 tagging {name}"):
+            systems = {}
+            env = cache.env(name, "tagging", profile, error_budget=0.01)
+            ex = TaggingExecutor(env, full_family=profile.full_family,
+                                 levels=LEVELS)
+            systems["ZC2"] = (env, ex.run(), tag_accuracy(env, ex.tags))
+            env = cache.env(name, "tagging", profile, error_budget=0.01)
+            systems["CloudOnly"] = (env, cloud_only_tagging(env, LEVELS), {})
+            env = cache.env(name, "tagging", profile, error_budget=0.01)
+            systems["OptOp"] = (env, optop_tagging(
+                env, full_family=profile.full_family, levels=LEVELS), {})
+            env = cache.env(name, "tagging", profile, error_budget=0.01)
+            systems["PreIndexAll"] = (env, preindex_tagging(env, LEVELS), {})
+        zc2_done = systems["ZC2"][1].done_t
+        for sysname, (env, prog, acc) in systems.items():
+            rows.append({
+                "video": name, "system": sysname,
+                "done_s": round(prog.done_t, 1),
+                "t_half_levels_s": round(prog.time_to(0.5) or 0, 1),
+                "realtime_x": round(realtime_x(env, prog.done_t), 1),
+                "speedup_vs_zc2": round(prog.done_t / zc2_done, 2),
+                "op_switches": len(prog.op_switches),
+                "MB_up": round(prog.bytes_up / 1e6, 1),
+                "fn_rate": round(acc.get("fn_rate", -1), 4),
+                "fp_rate": round(acc.get("fp_rate", -1), 4),
+            })
+    return rows
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import PROFILES, print_table
+    profile = PROFILES[profile_name]
+    cache = SceneCache(profile.hours)
+    r = run_retrieval(profile, cache)
+    print_table("Fig 9a: Retrieval query delay", r)
+    write_csv("fig9_retrieval", r)
+    t = run_tagging(profile, cache)
+    print_table("Fig 9b: Tagging query delay", t)
+    write_csv("fig9_tagging", t)
+    return r + t
+
+
+if __name__ == "__main__":
+    main()

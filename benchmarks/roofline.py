@@ -1,0 +1,94 @@
+"""§Roofline — per (arch x shape x mesh) roofline terms from the
+compiled multi-pod dry-run artifacts (results/dryrun/*.json).
+
+Reports, per cell: the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and the
+roofline fraction = dominant_term / sum_terms-free upper bound proxy
+(see EXPERIMENTS.md §Roofline for the interpretation)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import print_table, write_csv
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+DRYRUN_OPT = Path(__file__).resolve().parent.parent / "results" / "dryrun_opt"
+
+
+def load_cells(mesh: str = "pod", root: Path = None) -> List[dict]:
+    rows = []
+    root = root if root is not None else DRYRUN
+    for p in sorted(root.glob(f"*__{mesh}.json")):
+        res = json.loads(p.read_text())
+        if res.get("error") is not None:
+            rows.append({"arch": res["arch"], "shape": res["shape"],
+                         "error": res["error"]})
+            continue
+        r = res["roofline"]
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        dom = r["dominant"]
+        # roofline fraction: how close the compiled program is to the
+        # bound set by its own dominant resource if the other two were
+        # free and perfectly overlapped. The *achievable* step time is
+        # >= max(terms); the hardware bound for its useful work is
+        # useful_model_time = MODEL_FLOPS / (chips * peak).
+        useful_t = r["model_flops_global"] / (res["n_chips"] * 197e12)
+        frac = useful_t / max(max(terms.values()), 1e-12)
+        rows.append({
+            "arch": res["arch"], "shape": res["shape"],
+            "mesh": res["mesh"],
+            "compute_s": round(terms["compute"], 4),
+            "memory_s": round(terms["memory"], 4),
+            "collective_s": round(terms["collective"], 4),
+            "dominant": dom,
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_frac": round(frac, 4),
+            "params_B": round(res["total_params"] / 1e9, 2),
+        })
+    return rows
+
+
+def summarize(rows: List[dict]) -> List[dict]:
+    ok = [r for r in rows if "error" not in r]
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    out = []
+    for dom, rs in sorted(by_dom.items()):
+        worst = min(rs, key=lambda r: r["roofline_frac"])
+        out.append({
+            "dominant": dom, "cells": len(rs),
+            "worst_cell": f"{worst['arch']}/{worst['shape']}",
+            "worst_frac": worst["roofline_frac"],
+            "median_frac": sorted(r["roofline_frac"] for r in rs)[
+                len(rs) // 2],
+        })
+    return out
+
+
+def main(profile_name: str = "standard"):
+    for mesh in ("pod", "multipod"):
+        rows = load_cells(mesh)
+        print_table(f"Roofline BASELINE — {mesh} mesh", rows)
+        write_csv(f"roofline_{mesh}", rows)
+        print_table(f"Roofline summary (baseline) — {mesh}", summarize(rows))
+    if DRYRUN_OPT.exists():
+        base = {(r["arch"], r["shape"]): r for r in load_cells("pod")}
+        rows = load_cells("pod", DRYRUN_OPT)
+        for r in rows:
+            b = base.get((r.get("arch"), r.get("shape")))
+            if b and "error" not in r and "error" not in b:
+                mt_b = max(b["compute_s"], b["memory_s"], b["collective_s"])
+                mt_o = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                r["speedup_vs_baseline"] = round(mt_b / max(mt_o, 1e-12), 2)
+        print_table("Roofline OPTIMIZED (post §Perf) — pod mesh", rows)
+        write_csv("roofline_optimized_pod", rows)
+        print_table("Roofline summary (optimized) — pod", summarize(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

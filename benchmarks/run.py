@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper figure + the roofline reader.
+
+  PYTHONPATH=src python -m benchmarks.run                 # standard profile
+  PYTHONPATH=src python -m benchmarks.run --profile quick
+  PYTHONPATH=src python -m benchmarks.run --figures fig9,roofline
+
+Outputs: printed tables (tee to bench_output.txt) + results/bench/*.csv.
+The multi-pod dry-run itself is not re-run here (it takes ~45 min of
+XLA compiles); run `python -m repro.launch.dryrun` to regenerate its
+artifacts — `roofline` reads them."""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig6_operators, fig9_queries, fig10_counting,
+                        fig11_traffic, fig12_ablation, fig13_landmarks,
+                        roofline)
+
+FIGURES = {
+    "fig6": fig6_operators.main,
+    "fig9": fig9_queries.main,
+    "fig10": fig10_counting.main,
+    "fig11": fig11_traffic.main,
+    "fig12": fig12_ablation.main,
+    "fig13": fig13_landmarks.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default="standard",
+                    choices=["quick", "standard", "paper"])
+    ap.add_argument("--figures", default="all",
+                    help="comma list of: " + ",".join(FIGURES))
+    args = ap.parse_args()
+
+    names = list(FIGURES) if args.figures == "all" else \
+        [f.strip() for f in args.figures.split(",")]
+    t0 = time.time()
+    failures = []
+    for name in names:
+        print(f"\n######## {name} (profile={args.profile}) ########",
+              flush=True)
+        try:
+            FIGURES[name](args.profile)
+        except Exception as e:  # noqa: BLE001 — run the rest, report at end
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s; "
+          f"{len(names) - len(failures)}/{len(names)} figures ok")
+    for name, err in failures:
+        print(f"  FAILED {name}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

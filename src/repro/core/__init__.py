@@ -1,0 +1,10 @@
+"""ZC² — the paper's contribution: a camera/cloud runtime for
+retrospective queries over cold video on zero-streaming cameras.
+
+Layers: video substrate (video.py), cost models (hardware.py), detector
+oracle (oracle.py), capture-time landmarks (landmarks.py, skew.py), the
+on-camera operator family (operators.py, factory.py), cloud-side online
+training (training.py), upgrade policies (upgrade.py), and the
+discrete-event multipass query executors (ranking.py, filtering.py,
+counting.py, simulator.py) plus the paper's comparison systems
+(baselines.py)."""

@@ -1,0 +1,214 @@
+"""Counting executors (§6.3).
+
+max-Count: the camera ranks randomly-selected frames by the operator's
+*count* head; uploads flow in predicted-count order; the cloud re-counts
+uploads and monitors ranking quality via the Manhattan-distance metric
+to decide upgrades. Completion = the cloud has seen the true max.
+
+avg/median-Count: NO on-camera operator — the camera random-samples
+frames (unbiased, LLN); landmarks provide the initial samples, which is
+why accurate landmarks make these queries converge in seconds (§8.2)
+and inaccurate ones slow them by orders of magnitude (§8.4).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import factory, landmarks as lm_mod, upgrade
+from repro.core.operators import score_frames
+from repro.core.query import Progress, QueryEnv
+
+RECENT_WINDOW = 24
+QUALITY_TRIGGER = 0.35        # Manhattan-distance urgency threshold
+
+
+class MaxCountExecutor:
+    def __init__(self, env: QueryEnv, *, full_family: bool = True):
+        self.env = env
+        self.full_family = full_family
+
+    def _counts(self, trained, idxs: np.ndarray) -> np.ndarray:
+        arch = trained.arch
+        out = np.empty(len(idxs), np.float64)
+        B = 1024
+        for i in range(0, len(idxs), B):
+            crops = self.env.bank.crops(idxs[i:i + B], arch.region,
+                                        arch.input_size)
+            _, cnt = score_frames(trained.params, crops)
+            out[i:i + B] = cnt
+        return out
+
+    def run(self, max_passes: int = 8) -> Progress:
+        env = self.env
+        prog = Progress()
+        frames = env.frames
+        n = len(frames)
+        gt_max = int(env.gt_count.max()) if n else 0
+        fps_net = env.net.frame_upload_fps
+        rng = np.random.default_rng(env.video.spec.seed * 13 + 2)
+
+        lms = env.store.in_range(frames[0], frames[-1] + 1)
+        t = env.net.upload_time(n_thumbs=len(lms))
+        prog.bytes_up += len(lms) * env.net.thumbnail_bytes
+        li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
+        env.trainer.add_samples(li, ll, lc)
+        # w/o-landmark bootstrap (§8.4): seed the pool with random uploads
+        if env.trainer.n_samples < 30:
+            brng = np.random.default_rng(env.video.spec.seed * 31 + 9)
+            for idx in brng.choice(frames, min(60, n), replace=False):
+                t += 1.0 / fps_net
+                prog.bytes_up += env.net.frame_bytes
+                pos, cnt = env.cloud_verify(int(idx))
+                env.trainer.add_samples([int(idx)], [pos], [cnt])
+        heat = lm_mod.heatmap(env.store, env.query.cls)
+        profiled = factory.profile(
+            factory.breed(heat if heat.sum() > 0 else None,
+                          full=self.full_family), env.tier)
+        r_pos = lm_mod.positive_ratio(env.store, env.query.cls)
+        cur = upgrade.initial_ranker(profiled, fps_net, r_pos)
+        trained = env.trainer.train(cur.arch)
+        t += env.trainer.train_time(cur.arch) + \
+            env.cloud.ship_time(cur.arch.size_bytes)
+        prog.op_switches.append((t, cur.name))
+
+        # seed best with landmark counts already on the cloud
+        best = max((l.count(env.query.cls) for l in lms), default=0)
+        prog.record(t, best / max(gt_max, 1))
+        if best >= gt_max:
+            prog.done_t = t
+            return prog
+
+        uploaded = set()
+        t_cam = t_net = t
+        heap: List = []
+        recent_cam: List[float] = []
+        recent_cloud: List[int] = []
+
+        for pass_no in range(max_passes):
+            # random frame selection (§6.3), rank by predicted count
+            unsent = np.array([i for i in frames if int(i) not in uploaded],
+                              np.int64)
+            if len(unsent) == 0:
+                break
+            order = unsent[rng.permutation(len(unsent))]
+            counts = self._counts(trained, order)
+            dt_cam = 1.0 / max(cur.fps, 1e-9)
+            ci = 0
+            cam_score = {}
+            upgrade_pending = False
+            while True:
+                if best >= gt_max:
+                    prog.done_t = t_net
+                    prog.record(t_net, 1.0)
+                    return prog
+                if ci < len(order) and t_cam <= t_net:
+                    idx = int(order[ci])
+                    t_cam += dt_cam
+                    cam_score[idx] = float(counts[ci])
+                    heapq.heappush(heap, (-counts[ci], idx))
+                    ci += 1
+                    continue
+                entry = None
+                while heap:
+                    c, idx = heapq.heappop(heap)
+                    if idx in uploaded or cam_score.get(idx) != -c:
+                        continue
+                    entry = (c, idx)
+                    break
+                if entry is None:
+                    if ci >= len(order):
+                        break
+                    t_net = max(t_net, t_cam)
+                    continue
+                c, idx = entry
+                t_net = max(t_net, t_net) + 1.0 / fps_net
+                prog.bytes_up += env.net.frame_bytes
+                uploaded.add(idx)
+                _, cloud_cnt = env.cloud_verify(idx)
+                env.trainer.add_samples([idx], [cloud_cnt > 0], [cloud_cnt])
+                recent_cam.append(-c)
+                recent_cloud.append(cloud_cnt)
+                if cloud_cnt > best:
+                    best = cloud_cnt
+                    prog.record(t_net, best / max(gt_max, 1))
+                if len(recent_cam) >= RECENT_WINDOW and not upgrade_pending:
+                    q = upgrade.manhattan_quality(
+                        np.array(recent_cam[-RECENT_WINDOW:]),
+                        np.array(recent_cloud[-RECENT_WINDOW:]))
+                    if q > QUALITY_TRIGGER:
+                        upgrade_pending = True
+                        break
+            nxt = upgrade.next_ranker(cur, profiled, fps_net, env.trainer,
+                                      rank_by="count_mae")
+            if nxt is not None:
+                cur, trained = nxt
+                t_cam = max(t_cam, t_net) + \
+                    env.cloud.ship_time(cur.arch.size_bytes)
+                prog.op_switches.append((t_cam, cur.name))
+            recent_cam.clear()
+            recent_cloud.clear()
+        prog.done_t = max(t_cam, t_net)
+        return prog
+
+
+class SampleCountExecutor:
+    """avg/median Counting: pure random sampling + LLN (§6.3)."""
+
+    def __init__(self, env: QueryEnv, *, stat: str = "mean",
+                 tolerance: float = 0.01, sustain: int = 20):
+        assert stat in ("mean", "median")
+        self.env = env
+        self.stat = stat
+        self.tolerance = tolerance
+        self.sustain = sustain
+
+    def run(self, max_uploads: Optional[int] = None) -> Progress:
+        env = self.env
+        prog = Progress()
+        frames = env.frames
+        gt = float(np.mean(env.gt_count)) if self.stat == "mean" \
+            else float(np.median(env.gt_count))
+        rng = np.random.default_rng(env.video.spec.seed * 17 + 3)
+        fps_net = env.net.frame_upload_fps
+
+        # landmarks are the initial samples (already labeled by the
+        # capture-time detector; the cloud re-validates on its detector)
+        lms = env.store.in_range(frames[0], frames[-1] + 1)
+        t = env.net.upload_time(n_thumbs=len(lms))
+        prog.bytes_up += len(lms) * env.net.thumbnail_bytes
+        samples = [l.count(env.query.cls) for l in lms]
+
+        def est() -> float:
+            if not samples:
+                return 0.0
+            return float(np.mean(samples)) if self.stat == "mean" \
+                else float(np.median(samples))
+
+        def rel_err(e: float) -> float:
+            scale = max(abs(gt), 1e-6)
+            return abs(e - gt) / scale
+
+        max_uploads = max_uploads or len(frames)
+        ok_streak = 0
+        e = est()
+        prog.record(t, max(0.0, 1.0 - rel_err(e)))
+        order = rng.permutation(len(frames))
+        for k in range(max_uploads):
+            if rel_err(e) <= self.tolerance:
+                ok_streak += 1
+                if ok_streak >= self.sustain:
+                    break
+            else:
+                ok_streak = 0
+            idx = int(frames[order[k % len(frames)]])
+            t += 1.0 / fps_net
+            prog.bytes_up += env.net.frame_bytes
+            _, cnt = env.cloud_verify(idx)
+            samples.append(cnt)
+            e = est()
+            prog.record(t, max(0.0, 1.0 - rel_err(e)))
+        prog.done_t = t
+        return prog

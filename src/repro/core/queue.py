@@ -1,0 +1,61 @@
+"""Asynchronous ranked upload queue (§3 notable design 4).
+
+The camera ranks frames while the network uploads — concurrently. A
+frame becomes *available* for upload only after its ranking completes
+(causality), and later passes may re-score unsent frames (lazy
+invalidation: stale heap entries are skipped at pop time, so the queue
+reflects the newest ranking without a rebuild — the "continuously
+reordering unsent frames" of Fig. 7).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set, Tuple
+
+
+class AsyncUploadQueue:
+    def __init__(self):
+        self._pending: Deque[Tuple[float, float, int]] = deque()
+        self._heap: List[Tuple[float, int]] = []
+        self._score: Dict[int, float] = {}
+        self._uploaded: Set[int] = set()
+
+    def rank(self, t: float, idx: int, score: float) -> None:
+        """Camera finished ranking ``idx`` at time ``t``."""
+        self._score[idx] = score
+        self._pending.append((t, score, idx))
+
+    def mark_uploaded(self, idx: int) -> None:
+        self._uploaded.add(idx)
+
+    def uploaded(self, idx: int) -> bool:
+        return idx in self._uploaded
+
+    @property
+    def n_uploaded(self) -> int:
+        return len(self._uploaded)
+
+    def current_score(self, idx: int, default: float = 0.5) -> float:
+        return self._score.get(idx, default)
+
+    def _admit(self, t: float) -> None:
+        while self._pending and self._pending[0][0] <= t:
+            _, score, idx = self._pending.popleft()
+            heapq.heappush(self._heap, (-score, idx))
+
+    def pop_best(self, t: float) -> Tuple[Optional[int], Optional[float]]:
+        """Best available frame at time ``t``.
+
+        Returns (idx, None) when one is available; (None, t_next) when
+        the queue is momentarily empty but a ranking completes at
+        t_next; (None, None) when fully drained."""
+        self._admit(t)
+        while self._heap:
+            s, idx = heapq.heappop(self._heap)
+            if idx in self._uploaded or self._score.get(idx) != -s:
+                continue
+            return idx, None
+        if self._pending:
+            return None, self._pending[0][0]
+        return None, None

@@ -1,0 +1,77 @@
+"""Pallas TPU conv scorer: the ZC² on-camera operator hot spot (§7).
+
+The paper accelerates its AlexNet-variant operators with NNPACK on Arm;
+the TPU-native analogue is a fused 3x3/stride-2 conv + bias + ReLU whose
+working set (operator inputs are <= 100x100x32) fits entirely in VMEM —
+so the kernel is batch-parallel: grid over image blocks, one-shot conv
+per program as 9 shifted MXU matmuls (kh, kw unrolled at trace time;
+channels on the 128-lane minor dim).
+
+Used as the inference fast path for operator scoring on TPU serving
+hosts; the jnp path in core/operators.py remains the CPU/camera oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, H: int, W: int,
+                 Ho: int, Wo: int):
+    x = x_ref[...].astype(jnp.float32)          # (Nb, H+2, W+2, Cin) padded
+    w = w_ref[...].astype(jnp.float32)          # (3, 3, Cin, Cout)
+    Nb = x.shape[0]
+    Cin = x.shape[-1]
+    Cout = w.shape[-1]
+    acc = jnp.zeros((Nb, Ho, Wo, Cout), jnp.float32)
+    for kh in range(3):
+        for kw in range(3):
+            # SAME/stride-s: out(i,j) <- x(s*i + kh, s*j + kw) on the
+            # zero-padded input
+            patch = jax.lax.slice(
+                x, (0, kh, kw, 0),
+                (Nb, kh + (Ho - 1) * stride + 1, kw + (Wo - 1) * stride + 1,
+                 Cin),
+                (1, stride, stride, 1))          # (Nb, Ho, Wo, Cin)
+            acc += jax.lax.dot_general(
+                patch.reshape(-1, Cin), w[kh, kw],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).reshape(Nb, Ho, Wo, Cout)
+    acc += b_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.maximum(acc, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "block_n", "interpret"))
+def conv_scorer(x, w, b, *, stride: int = 2, block_n: int = 8,
+                interpret: bool = False) -> jnp.ndarray:
+    """Fused 3x3 SAME conv + bias + ReLU. x: (N, H, W, Cin) -> (N, Ho, Wo, Cout)."""
+    N, H, W, Cin = x.shape
+    Cout = w.shape[-1]
+    Ho = -(-H // stride)
+    Wo = -(-W // stride)
+    block_n = min(block_n, N)
+    padn = (-N) % block_n
+    # SAME padding for 3x3: one pixel each side (plus stride remainder)
+    ph = (Ho - 1) * stride + 3 - H
+    pw = (Wo - 1) * stride + 3 - W
+    top, left = ph // 2, pw // 2
+    xp = jnp.pad(x, ((0, padn), (top, ph - top), (left, pw - left), (0, 0)))
+    Np = xp.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, stride=stride, H=H, W=W, Ho=Ho, Wo=Wo),
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n,) + xp.shape[1:], lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, Ho, Wo, Cout),
+                               lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Ho, Wo, Cout), x.dtype),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[:N]

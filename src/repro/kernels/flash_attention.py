@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window, MHA
+over flat heads (GQA is expanded by the caller, matching the model's
+layout — see models/attention.py).
+
+TPU-native design (DESIGN.md §6): grid = (batch*heads, q_blocks,
+kv_blocks) with the kv dim innermost-sequential; online-softmax running
+stats (m, l) and the output accumulator live in VMEM scratch across kv
+steps. Block shapes keep the MXU fed (multiples of 128 on the matmul
+dims) and the working set inside VMEM:
+  q (Bq, D) + k,v (Bk, D) + acc (Bq, D) f32  ~= 1.3 MB at Bq=Bk=512,
+  D=128 — well under the ~16 MB/core budget with double buffering.
+
+Fully-masked kv blocks (beyond the causal diagonal or the window band)
+are skipped via ``pl.when`` — the same banding as the XLA path, so the
+kernel's FLOPs match the roofline model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: Optional[int],
+               block_q: int, block_k: int, q_offset: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + q_offset         # absolute q position
+    k_start = ki * block_k
+
+    def needed():
+        if not causal and window is None:
+            return True
+        ok = True
+        if causal:
+            ok = jnp.logical_and(ok, k_start <= q_start + block_q - 1)
+        if window is not None:
+            ok = jnp.logical_and(
+                ok, k_start + block_k - 1 > q_start - window)
+        return ok
+
+    @pl.when(needed())
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)       # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)       # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 512,
+                    block_k: int = 512, q_offset: int = 0,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, H, D). Returns (B, Sq, H, D).
+
+    ``q_offset``: absolute position of q[0] (chunked prefill); when 0 and
+    Sq != Sk, q is assumed aligned to the END of k (decode-suffix
+    convention, matching ref.attention).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if q_offset == 0 and Sq != Sk:
+        q_offset = Sk - Sq
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = 1.0 / (D ** 0.5)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid = (B * H, Sq // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset, n_kv=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas(True)`` flips the model's hot paths onto the kernels (TPU);
+the default keeps the pure-jnp/XLA paths (CPU dry-run and tests compare
+both). Tests always call kernels with interpret=True.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+from repro.kernels import (conv_scorer as _conv, decode_attention as _dec,
+                           flash_attention as _fa, moe_gmm as _gmm,
+                           rmsnorm as _rms, ref)
+
+_STATE = {"pallas": False, "interpret": False}
+
+
+@contextlib.contextmanager
+def use_pallas(enabled: bool = True, interpret: bool = False):
+    prev = dict(_STATE)
+    _STATE.update(pallas=enabled, interpret=interpret)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def enabled() -> bool:
+    return _STATE["pallas"]
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None):
+    if _STATE["pallas"]:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   interpret=_STATE["interpret"])
+    return ref.attention(q, k, v, causal=causal, window=window)
+
+
+def decode_attention(q, k, v):
+    if _STATE["pallas"]:
+        return _dec.decode_attention(q, k, v,
+                                     interpret=_STATE["interpret"])
+    return ref.decode_attention(q, k, v)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    if _STATE["pallas"]:
+        return _rms.rmsnorm(x, scale, eps=eps,
+                            interpret=_STATE["interpret"])
+    return ref.rmsnorm(x, scale, eps)
+
+
+def moe_gmm(x, w):
+    if _STATE["pallas"]:
+        return _gmm.moe_gmm(x, w, interpret=_STATE["interpret"])
+    return ref.moe_gmm(x, w)
+
+
+def conv_scorer(x, w, b, *, stride: int = 2):
+    if _STATE["pallas"]:
+        return _conv.conv_scorer(x, w, b, stride=stride,
+                                 interpret=_STATE["interpret"])
+    return ref.conv_scorer(x, w, b, stride)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the mathematical definition with no tiling/fusion —
+tests sweep shapes/dtypes and assert_allclose kernels against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, H, D); q aligned to the END of k
+    (q position i corresponds to absolute position Sk - Sq + i)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    offset = Sk - Sq
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v) -> jnp.ndarray:
+    """q: (B, H, D) single query vs full cache k/v: (B, S, H, D)."""
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) *
+            scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_gmm(buf, w) -> jnp.ndarray:
+    """Grouped matmul: buf (E, C, d) @ w (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(buf.dtype)
+
+
+def conv_scorer(x, w, b, stride: int = 2) -> jnp.ndarray:
+    """3x3 SAME conv + bias + relu. x: (N, H, W, Cin); w: (3,3,Cin,Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(out + b.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,382 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (before any other import): jax locks the
+device count at first init.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import base as cfgbase          # noqa: E402
+from repro.launch import hlo_analysis              # noqa: E402
+from repro.launch import specs as specs_mod        # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import layers, transformer       # noqa: E402
+from repro.parallel import ops as pops             # noqa: E402
+from repro.parallel import sharding                # noqa: E402
+from repro.train import optimizer as opt           # noqa: E402
+from repro.train import train_step as steps        # noqa: E402
+
+# --- TPU v5e hardware model (per chip) -------------------------------------
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link (per-chip effective, one link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op, by type.
+
+    Counts `op(` and `op-start(`; skips `-done` (same tensor). This is
+    per-*program* (per-device) bytes moved, matching cost_analysis scope.
+    """
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            for form in (f" {c}(", f" {c}-start("):
+                idx = line.find(form)
+                if idx >= 0:
+                    lhs = line[:idx]
+                    if "=" in lhs:
+                        lhs = lhs.split("=", 1)[1]
+                    out[c]["count"] += 1
+                    out[c]["bytes"] += _shape_bytes(lhs)
+                    break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n_active = active_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult * n_active * tokens)
+
+
+def count_params(tree) -> int:
+    import math
+    leaves = jax.tree_util.tree_leaves(tree)
+    # math.prod, NOT jnp.prod: int32 overflows at llama4's 386B experts
+    return int(sum(math.prod(l.shape) if l.shape else 1 for l in leaves))
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    with layers.shape_only():
+        ann = transformer.init_model(cfg, jax.random.PRNGKey(0))
+    params, _ = layers.split_annotated(ann)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        if any(k in ("wg", "wu", "wo") for k in keys) and \
+                any(k == "ffn" for k in keys) and "router" not in keys:
+            # expert weights: (E, d, ff) etc -> active fraction top_k/E
+            if len(leaf.shape) >= 3 and leaf.shape[-3] >= 2 and \
+                    cfg.num_experts > 0 and leaf.shape[-3] in (
+                        cfg.num_experts,
+                        -(-cfg.num_experts // 16) * 16):
+                n = n // leaf.shape[-3] * max(cfg.top_k, 1)
+        total += n
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, args, in_shardings, out_shardings, meta)."""
+    cfg = cfgbase.get_config(arch)
+    cell = cfgbase.SHAPES[shape_name]
+    with layers.shape_only():
+        ann = transformer.init_model(cfg, jax.random.PRNGKey(0))
+    params, axes = layers.split_annotated(ann)
+    pspecs = sharding.param_shardings(params, axes, mesh)
+    meta = {"total_params": count_params(params),
+            "active_params": active_params(cfg)}
+
+    if cell.kind == "train":
+        ocfg = opt.AdamWConfig()
+        ostate = opt.OptState(
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params),
+            jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params))
+        ospecs = opt.OptState(
+            sharding.replicated(mesh),
+            jax.tree_util.tree_map(lambda s: s, pspecs),
+            jax.tree_util.tree_map(lambda s: s, pspecs))
+        batch = specs_mod.train_specs(cfg, cell)
+        bspecs = sharding.data_batch_specs(mesh, batch)
+        fn = steps.make_train_step(cfg, ocfg)
+        args = (params, ostate, batch)
+        in_sh = (pspecs, ospecs, bspecs)
+        out_sh = (pspecs, ospecs, sharding.replicated(mesh))
+    elif cell.kind == "prefill":
+        batch = specs_mod.prefill_specs(cfg, cell)
+        bspecs = sharding.data_batch_specs(mesh, batch)
+        cache_shapes = jax.eval_shape(
+            lambda p, b: transformer.prefill(cfg, p, b["tokens"],
+                                             b.get("prefix_embeds")),
+            params, batch)[1]
+        cspecs = sharding.cache_shardings(cfg, cache_shapes, mesh,
+                                          cell.global_batch)
+        fn = steps.make_prefill_step(cfg)
+        args = (params, batch)
+        in_sh = (pspecs, bspecs)
+        out_sh = (sharding.replicated(mesh), cspecs)
+    else:  # decode
+        batch, caches = specs_mod.decode_specs(cfg, cell)
+        cspecs = sharding.cache_shardings(cfg, caches, mesh,
+                                          cell.global_batch)
+        bspecs = sharding.data_batch_specs(mesh, batch)
+        fn = steps.make_decode_step(cfg)
+        args = (params, caches, batch)
+        in_sh = (pspecs, cspecs, bspecs)
+        out_sh = (sharding.replicated(mesh), cspecs)
+    return fn, args, in_sh, out_sh, meta
+
+
+def _hlo_cache_path(outdir, tag: str):
+    # under outdir (NOT outdir.parent): separate result sets must never
+    # share an HLO cache — a collision here once cost us the baseline
+    # artifacts (EXPERIMENTS.md §Perf, artifact-provenance note)
+    d = Path(outdir) / "hlo"
+    d.mkdir(parents=True, exist_ok=True)
+    return d / f"{tag}.hlo.zst"
+
+
+def save_hlo(outdir, tag: str, text: str) -> None:
+    import zstandard
+    _hlo_cache_path(outdir, tag).write_bytes(
+        zstandard.ZstdCompressor(level=6).compress(text.encode()))
+
+
+def load_hlo(outdir, tag: str):
+    import zstandard
+    p = _hlo_cache_path(outdir, tag)
+    if not p.exists():
+        return None
+    return zstandard.ZstdDecompressor().decompress(p.read_bytes()).decode()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             outdir=None, baseline: bool = False) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cell = cfgbase.SHAPES[shape_name]
+    cfg = cfgbase.get_config(arch)
+    fn, args, in_sh, out_sh, meta = build_cell(arch, shape_name, mesh)
+
+    # install the mesh context so model-internal shard() constraints
+    # (e.g. the mamba scan's batch pinning) are emitted during tracing.
+    # --baseline traces WITHOUT the context: every shard() is a no-op
+    # and the MoE dispatch runs ungrouped — the pre-§Perf program.
+    rules = sharding.default_rules(mesh)
+
+    def fn_with_mesh(*a):
+        if baseline:
+            return fn(*a)
+        with pops.use_mesh(mesh, rules):
+            return fn(*a)
+
+    jfn = jax.jit(fn_with_mesh, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if outdir is not None:
+        tag = f"{arch}__{shape_name}__{'multipod' if multi_pod else 'pod'}"
+        save_hlo(outdir, tag, hlo)
+
+    # Corrected per-device analysis (while-loop trip counts applied); raw
+    # cost_analysis kept for reference — see EXPERIMENTS.md §Roofline notes.
+    corr = hlo_analysis.analyze(hlo)
+    flops = corr["flops"]
+    bytes_acc = corr["bytes"]
+    coll_bytes = corr["collective_bytes"]
+    mf = model_flops(cfg, cell)
+
+    compute_t = flops / PEAK_FLOPS
+    memory_t = bytes_acc / HBM_BW
+    coll_t = coll_bytes / ICI_BW
+    dominant = max(("compute", compute_t), ("memory", memory_t),
+                   ("collective", coll_t), key=lambda kv: kv[1])[0]
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "total_params": meta["total_params"],
+        "active_params": meta["active_params"],
+        "per_device": {
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_acc,
+            "collective_bytes": coll_bytes,
+            "collectives": corr["collectives"],
+            "raw_cost_analysis": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+        },
+        "memory_analysis": {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        } if mem is not None else None,
+        "roofline": {
+            "compute_s": compute_t,
+            "memory_s": memory_t,
+            "collective_s": coll_t,
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "useful_flops_ratio": mf / max(flops * n_chips, 1.0),
+        },
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    return result
+
+
+def reanalyze_all(outdir: Path) -> int:
+    """Recompute roofline terms for every result JSON from cached HLO."""
+    n = 0
+    for path in sorted(outdir.glob("*.json")):
+        res = json.loads(path.read_text())
+        if res.get("error") is not None:
+            continue
+        tag = path.stem
+        hlo = load_hlo(outdir, tag)
+        if hlo is None:
+            print(f"[reanalyze] {tag}: no cached HLO, skipping")
+            continue
+        corr = hlo_analysis.analyze(hlo, by_opcode=True)
+        cfg = cfgbase.get_config(res["arch"])
+        cell = cfgbase.SHAPES[res["shape"]]
+        mf = model_flops(cfg, cell)
+        compute_t = corr["flops"] / PEAK_FLOPS
+        memory_t = corr["bytes"] / HBM_BW
+        coll_t = corr["collective_bytes"] / ICI_BW
+        res["per_device"].update({
+            "hlo_flops": corr["flops"], "hlo_bytes": corr["bytes"],
+            "collective_bytes": corr["collective_bytes"],
+            "collectives": corr["collectives"],
+            "op_bytes_top": dict(list(corr["op_bytes"].items())[:8]),
+            "op_flops_top": dict(list(corr["op_flops"].items())[:8]),
+        })
+        res["roofline"].update({
+            "compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t,
+            "dominant": max(("compute", compute_t), ("memory", memory_t),
+                            ("collective", coll_t), key=lambda kv: kv[1])[0],
+            "model_flops_global": mf,
+            "useful_flops_ratio": mf / max(corr["flops"] * res["n_chips"], 1.0),
+        })
+        path.write_text(json.dumps(res, indent=2))
+        n += 1
+        print(f"[reanalyze] {tag}: dominant={res['roofline']['dominant']}")
+    print(f"reanalyzed {n} cells")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="trace without the mesh context (pre-§Perf "
+                         "program: no shard() pins, ungrouped MoE)")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute roofline from cached HLO (no compile)")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        return reanalyze_all(Path(args.out))
+
+    archs = cfgbase.ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cells = cfgbase.cells_for(arch)
+        if args.shape not in (None, "all"):
+            cells = [c for c in cells if c.name == args.shape]
+        for cell in cells:
+            for mp in meshes:
+                tag = f"{arch}__{cell.name}__{'multipod' if mp else 'pod'}"
+                path = outdir / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    ok = json.loads(path.read_text()).get("error") is None
+                    print(f"[skip] {tag} ({'ok' if ok else 'FAILED'})")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, cell.name, mp, outdir=outdir,
+                                   baseline=args.baseline)
+                    res["error"] = None
+                    n_ok += 1
+                    r = res["roofline"]
+                    print(f"  ok: dominant={r['dominant']} "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"coll={r['collective_s']:.4f}s "
+                          f"(compile {res['timing']['compile_s']:.0f}s)",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"arch": arch, "shape": cell.name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    n_fail += 1
+                    print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+                path.write_text(json.dumps(res, indent=2))
+    print(f"dryrun complete: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

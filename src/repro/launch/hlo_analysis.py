@@ -1,0 +1,410 @@
+"""Corrected per-device cost analysis from post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scanned model (scan-over-layers, chunked attention, chunked SSM scans)
+undercounts FLOPs/bytes/collectives by the trip count. The optimized HLO
+annotates every while with ``backend_config={"known_trip_count":{"n":N}}``;
+this module parses the module text, builds the computation call graph and
+a per-computation symbol table (operand shapes are not printed inline),
+and accumulates per-category costs with loop multipliers:
+
+  flops             dot/conv/elementwise/reduce flop model (per device)
+  bytes             operand+output bytes of top-level & fusion ops
+                    (fusion internals contribute flops, not bytes —
+                    matching HloCostAnalysis's fusion treatment)
+  collective bytes  output bytes per collective op, by type
+
+This is the data source for the roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALLED_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_IDENT_RE = re.compile(r"\s*([a-zA-Z][\w\-]*)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all",
+               "collective-broadcast")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "cosine", "sine",
+    "tan", "atan2", "erf", "and", "or", "xor", "not", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "remainder", "clamp",
+    "select", "compare", "is-finite", "expm1", "log1p",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "logistic", "power",
+                   "rsqrt", "sqrt", "erf", "cosine", "sine", "tan",
+                   "exponential-minus-one", "log-plus-one"}
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "optimization-barrier"}
+
+
+def _shape_bytes(seg: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(seg: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_seg: str
+    operands: List[str]
+    attr_seg: str
+    arg_text: str = ""
+    is_root: bool = False
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the matching ')' for the '(' at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instr_line(line: str) -> Optional[Instr]:
+    s = line.strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    # output type: tuple '(...)' or 'dtype[dims]{layout}' token
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        out_seg = rest[:end]
+        rest2 = rest[end:]
+    else:
+        sp = rest.find(" ")
+        out_seg = rest[:sp] if sp > 0 else rest
+        rest2 = rest[sp:] if sp > 0 else ""
+    m = _IDENT_RE.match(rest2)
+    if not m:
+        return None
+    opcode = m.group(1)
+    paren = rest2.find("(", m.end(1) - 1)
+    if paren < 0:
+        return Instr(name, opcode, out_seg, [], rest2, "", is_root)
+    end = _balanced(rest2, paren)
+    args = rest2[paren + 1:end - 1]
+    attrs = rest2[end:]
+    operands = _NAME_RE.findall(args)
+    return Instr(name, opcode, out_seg, operands, attrs, args, is_root)
+
+
+def parse_module(text: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[List[Instr]] = None
+    for raw in text.splitlines():
+        if not raw:
+            continue
+        if not raw.startswith(" "):           # potential computation header
+            s = raw.strip()
+            if s.endswith("{") and ("(" in s) and ("->" in s or "ENTRY" in s):
+                is_entry = s.startswith("ENTRY")
+                body = s[len("ENTRY"):].strip() if is_entry else s
+                m = _NAME_RE.match(body) or re.match(r"([\w\.\-]+)", body)
+                if m:
+                    name = m.group(1)
+                    comps[name] = []
+                    cur = comps[name]
+                    if is_entry:
+                        entry = name
+                continue
+            if s == "}":
+                cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr_line(raw)
+        if ins is not None:
+            cur.append(ins)
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.out_seg)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attr_seg)
+    lhs_seg = symtab.get(ins.operands[0], "") if ins.operands else ""
+    lhs = _SHAPE_RE.findall(lhs_seg)
+    if m is None or not lhs:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in lhs[0][1].split(",") if d]
+    contract = 1
+    for ax in m.group(1).split(","):
+        if ax and int(ax) < len(lhs_dims):
+            contract *= lhs_dims[int(ax)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instr, symtab: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.out_seg)
+    if len(ins.operands) < 2:
+        return 2.0 * out_elems
+    k = _SHAPE_RE.findall(symtab.get(ins.operands[1], ""))
+    if not k:
+        return 2.0 * out_elems
+    kernel_elems = 1
+    for d in k[0][1].split(","):
+        if d:
+            kernel_elems *= int(d)
+    out_shapes = _SHAPE_RE.findall(ins.out_seg)
+    oc = 1
+    if out_shapes and out_shapes[0][1]:
+        oc = int(out_shapes[0][1].split(",")[-1])
+    return 2.0 * out_elems * max(kernel_elems // max(oc, 1), 1)
+
+
+
+
+def _slice_aware_fusion_bytes(ins: Instr, symtab: Dict[str, str],
+                              comps) -> float:
+    """Fusion IO bytes with dynamic-slice awareness.
+
+    A fusion operand consumed *only* as the sliced input of dynamic-slice
+    ops inside the fused computation is charged at the slice size (the
+    hardware streams the slice, not the whole stacked array — XLA's own
+    HloCostAnalysis overcounts here). Likewise a root dynamic-update-slice
+    OR root scatter charges the update region, not the whole updated
+    buffer: XLA buffer assignment aliases loop-carried / donated update
+    targets in place (KV-cache writes, MoE dispatch buffers), so the
+    functional copy in the HLO is not real HBM traffic.
+    """
+    called = _CALLED_RE.search(ins.attr_seg)
+    comp = comps.get(called.group(1)) if called else None
+    if comp is None:
+        return sum(_shape_bytes(symtab.get(o, "")) for o in ins.operands) \
+            + _shape_bytes(ins.out_seg)
+    inner_sym = {i.name: i.out_seg for i in comp}
+    # map parameter index -> inner param name
+    param_name = {}
+    for i2 in comp:
+        if i2.opcode == "parameter":
+            try:
+                param_name[int(i2.arg_text.strip())] = i2.name
+            except ValueError:
+                pass
+    total = 0.0
+    for oi, oname in enumerate(ins.operands):
+        full = _shape_bytes(symtab.get(oname, ""))
+        pname = param_name.get(oi)
+        if pname is None:
+            total += full
+            continue
+        uses = [u for u in comp if pname in u.operands]
+        if uses and all(u.opcode == "dynamic-slice" and
+                        u.operands and u.operands[0] == pname
+                        for u in uses):
+            total += sum(_shape_bytes(u.out_seg) for u in uses)
+        elif uses and all(u.opcode in ("dynamic-update-slice", "scatter")
+                          and u.operands and u.operands[0] == pname
+                          for u in uses):
+            # read the overwritten region only (in-place update target)
+            total += sum(_shape_bytes(inner_sym.get(u.operands[-1], ""))
+                         for u in uses if len(u.operands) > 1)
+        else:
+            total += full
+    # output: a root dus/scatter writes only the update region (the
+    # buffer itself is aliased in place by XLA buffer assignment)
+    root = next((i2 for i2 in comp if i2.is_root), None)
+    out_full = _shape_bytes(ins.out_seg)
+    if root is not None and root.opcode == "dynamic-update-slice" and \
+            len(root.operands) > 1:
+        total += _shape_bytes(inner_sym.get(root.operands[1], ""))
+    elif root is not None and root.opcode == "scatter" and \
+            len(root.operands) >= 3:
+        # scatter(target, indices, updates): write = updates region
+        total += _shape_bytes(inner_sym.get(root.operands[-1], ""))
+    else:
+        total += out_full
+    return total
+
+def analyze(text: str, by_opcode: bool = False) -> dict:
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    memo: Dict[str, dict] = {}
+
+    def _new_totals():
+        return {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+                "collective_bytes": 0.0,
+                "collectives": defaultdict(lambda: {"count": 0.0,
+                                                    "bytes": 0.0}),
+                "op_bytes": defaultdict(float), "op_flops": defaultdict(float)}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        totals = _new_totals()
+        memo[name] = totals
+        symtab = {i.name: i.out_seg for i in comps.get(name, ())}
+
+        def operand_bytes(ins: Instr) -> int:
+            return sum(_shape_bytes(symtab.get(o, "")) for o in ins.operands)
+
+        def add_sub(sub: dict, mult: float = 1.0, flops_only: bool = False):
+            totals["flops"] += sub["flops"] * mult
+            totals["transcendentals"] += sub["transcendentals"] * mult
+            for k, v in sub["op_flops"].items():
+                totals["op_flops"][k] += v * mult
+            if not flops_only:
+                totals["bytes"] += sub["bytes"] * mult
+                for k, v in sub["op_bytes"].items():
+                    totals["op_bytes"][k] += v * mult
+            totals["collective_bytes"] += sub["collective_bytes"] * mult
+            for ck, cv in sub["collectives"].items():
+                totals["collectives"][ck]["count"] += cv["count"] * mult
+                totals["collectives"][ck]["bytes"] += cv["bytes"] * mult
+
+        def add_bytes(op: str, b: float):
+            totals["bytes"] += b
+            totals["op_bytes"][op] += b
+
+        def add_flops(op: str, f: float):
+            totals["flops"] += f
+            totals["op_flops"][op] += f
+
+        for ins in comps.get(name, ()):
+            op = ins.opcode
+            out_elems = _shape_elems(ins.out_seg)
+            io_bytes = operand_bytes(ins) + _shape_bytes(ins.out_seg)
+            if op == "fusion":
+                called = _CALLED_RE.search(ins.attr_seg)
+                if called and called.group(1) in comps:
+                    add_sub(comp_cost(called.group(1)), flops_only=True)
+                add_bytes("fusion", _slice_aware_fusion_bytes(ins, symtab,
+                                                              comps))
+            elif op == "while":
+                body = _CALLED_RE.search(ins.attr_seg)
+                cond = _COND_RE.search(ins.attr_seg)
+                trip = _TRIP_RE.search(ins.attr_seg)
+                n = float(trip.group(1)) if trip else 1.0
+                for cname in filter(None, (body and body.group(1),
+                                           cond and cond.group(1))):
+                    if cname in comps:
+                        add_sub(comp_cost(cname), mult=n)
+            elif op == "conditional":
+                m = _BRANCHES_RE.search(ins.attr_seg)
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                    subs = [comp_cost(b) for b in branches if b in comps]
+                    if subs:
+                        add_sub(max(subs, key=lambda s: s["flops"]))
+            elif op in ("call", "custom-call", "async-start"):
+                called = _CALLED_RE.search(ins.attr_seg)
+                if called and called.group(1) in comps:
+                    add_sub(comp_cost(called.group(1)))
+                add_bytes(op, io_bytes)
+            elif op == "dot":
+                add_flops("dot", _dot_flops(ins, symtab))
+                add_bytes("dot", io_bytes)
+            elif op == "convolution":
+                add_flops("convolution", _conv_flops(ins, symtab))
+                add_bytes("convolution", io_bytes)
+            else:
+                base = op[:-6] if op.endswith("-start") else op
+                if base in COLLECTIVES:
+                    if op.endswith("-done"):
+                        continue
+                    b = _shape_bytes(ins.out_seg)
+                    totals["collective_bytes"] += b
+                    totals["collectives"][base]["count"] += 1
+                    totals["collectives"][base]["bytes"] += b
+                    add_bytes(base, io_bytes)
+                elif op in _ELEMENTWISE:
+                    add_flops("elementwise", out_elems)
+                    if op in _TRANSCENDENTAL:
+                        totals["transcendentals"] += out_elems
+                    add_bytes("elementwise", io_bytes)
+                elif op in ("reduce", "reduce-window"):
+                    add_flops("reduce", operand_bytes(ins) // 4)
+                    add_bytes("reduce", io_bytes)
+                elif op == "dynamic-slice":
+                    add_bytes(op, 2.0 * _shape_bytes(ins.out_seg))
+                elif op == "dynamic-update-slice":
+                    upd = _shape_bytes(symtab.get(ins.operands[1], "")) \
+                        if len(ins.operands) > 1 else 0
+                    add_bytes(op, 2.0 * upd)
+                elif op == "scatter":
+                    # in-place update target: indices + updates + write
+                    side = sum(_shape_bytes(symtab.get(o, ""))
+                               for o in ins.operands[1:])
+                    add_bytes(op, side + (
+                        _shape_bytes(symtab.get(ins.operands[-1], ""))
+                        if len(ins.operands) >= 3 else 0))
+                elif op in _FREE:
+                    pass
+                else:
+                    add_bytes(op, io_bytes)
+        memo[name] = totals
+        return totals
+
+    res = comp_cost(entry)
+    out = {
+        "flops": res["flops"],
+        "bytes": res["bytes"],
+        "transcendentals": res["transcendentals"],
+        "collective_bytes": res["collective_bytes"],
+        "collectives": {k: dict(v) for k, v in res["collectives"].items()},
+    }
+    if by_opcode:
+        out["op_bytes"] = dict(sorted(res["op_bytes"].items(),
+                                      key=lambda kv: -kv[1]))
+        out["op_flops"] = dict(sorted(res["op_flops"].items(),
+                                      key=lambda kv: -kv[1]))
+    return out

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every model input of every cell.
+
+``input_specs(arch, shape_name)`` returns the exact abstract inputs the
+corresponding step function is lowered with — weak-type-correct,
+shardable, zero device allocation (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models import transformer
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_specs(cfg, cell):
+    B, S = cell.global_batch, cell.seq_len
+    npfx = cfg.num_prefix_embeds if cfg.frontend == "vision" else 0
+    batch = {
+        "tokens": sds((B, S - npfx), jnp.int32),
+        "labels": sds((B, S - npfx), jnp.int32),
+    }
+    if npfx:
+        batch["prefix_embeds"] = sds((B, npfx, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    return batch
+
+
+def prefill_specs(cfg, cell):
+    B, S = cell.global_batch, cell.seq_len
+    npfx = cfg.num_prefix_embeds if cfg.frontend == "vision" else 0
+    batch = {"tokens": sds((B, S - npfx), jnp.int32)}
+    if npfx:
+        batch["prefix_embeds"] = sds((B, npfx, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    return batch
+
+
+def decode_specs(cfg, cell):
+    B = cell.global_batch
+    batch = {"tokens": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)}
+    caches = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, B, cell.seq_len))
+    return batch, caches
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public entry: (arch, shape) -> abstract inputs for its step fn."""
+    cfg = cfgbase.get_config(arch)
+    cell = cfgbase.SHAPES[shape_name]
+    if cell.kind == "train":
+        return train_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, cell)
+    return decode_specs(cfg, cell)

@@ -1,0 +1,258 @@
+"""GQA attention: chunked (flash-style) train/prefill path + decode path.
+
+Layout: flat query heads (B, S, H, D). To tensor-parallelize archs whose
+head count does not divide the 16-way model axis (phi4 24H, llama4 40H,
+llava 56H, granite-moe 24H), query heads are padded up to the next
+multiple of the TP size. Padded heads are *dead*: their wq/wo slices are
+multiplied by a constant 0/1 mask inside the forward, so they compute 0,
+contribute 0, and receive exactly-zero gradients — the assigned
+architecture is preserved bit-for-bit while every einsum dim shards.
+KV heads stay compact (B, S, KV, D) and are expanded to flat H via a
+trace-time gather that uses the *true* q->kv grouping.
+
+The train/prefill path is an XLA-native online-softmax over KV chunks,
+banded: fully-masked KV chunks are skipped at trace time, so causal and
+sliding-window FLOPs in ``cost_analysis`` are honest (~S*W for window,
+~S^2/2 for causal). On TPU the Pallas ``kernels/flash_attention`` kernel
+is swapped in via ``use_pallas``; the XLA path is what the CPU dry-run
+compiles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.parallel.ops import shard
+
+NEG_INF = -1e30
+
+
+def padded_heads(n_heads: int, tp: int = 16) -> int:
+    """Pad H up to a multiple of tp (only if not already divisible)."""
+    return -(-n_heads // tp) * tp if n_heads % tp else n_heads
+
+
+def kv_gather_index(n_heads: int, n_kv: int, h_pad: int) -> np.ndarray:
+    """True q->kv mapping for real heads; padded heads point at kv 0."""
+    g = n_heads // n_kv
+    idx = np.zeros((h_pad,), np.int32)
+    idx[:n_heads] = np.arange(n_heads) // g
+    return idx
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   stack: Tuple[int, ...], dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = ("layer",) * len(stack)
+    hp = padded_heads(n_heads)
+    return {
+        "wq": layers.param(kq, stack + (d, hp, head_dim),
+                           s + ("embed", "heads", "head_dim"), dtype),
+        "wk": layers.param(kk, stack + (d, n_kv, head_dim),
+                           s + ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": layers.param(kv, stack + (d, n_kv, head_dim),
+                           s + ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": layers.param(ko, stack + (hp, head_dim, d),
+                           s + ("heads", "head_dim", "embed"), dtype),
+    }
+
+
+def _head_mask(n_heads: int, h_pad: int, dtype):
+    if h_pad == n_heads:
+        return None
+    return (jnp.arange(h_pad) < n_heads).astype(dtype)
+
+
+def _proj_qkv(x, params, n_heads: int, n_kv: int, compute_dtype):
+    """Returns q (B,S,Hp,D), k/v (B,S,KV,D) with dead padded q heads."""
+    wq = params["wq"].astype(compute_dtype)
+    hp = wq.shape[-2]
+    mask = _head_mask(n_heads, hp, compute_dtype)
+    if mask is not None:
+        wq = wq * mask[:, None]
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dvk->bsvk", x, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dvk->bsvk", x, params["wv"].astype(compute_dtype))
+    return q, k, v
+
+
+def _proj_out(o, params, n_heads: int, compute_dtype):
+    wo = params["wo"].astype(compute_dtype)
+    mask = _head_mask(n_heads, wo.shape[0], compute_dtype)
+    if mask is not None:
+        wo = wo * mask[:, None, None]
+    return jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def expand_kv(k, n_heads: int, h_pad: int):
+    """(B,S,KV,D) -> (B,S,Hp,D) via the true grouping (gather)."""
+    n_kv = k.shape[-2]
+    if n_kv == h_pad:
+        return k
+    idx = jnp.asarray(kv_gather_index(n_heads, n_kv, h_pad))
+    return k[:, :, idx, :]
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style, banded) attention over flat heads
+# ---------------------------------------------------------------------------
+
+def _chunk_attend(q, k, v, qpos, kpos, window: Optional[int], scale: float,
+                  kv_chunk: int):
+    """q: (B,qc,H,D); k/v: (B,L,H,D). Online softmax over KV chunks."""
+    B, qc, H, D = q.shape
+    L = k.shape[1]
+    kvc = min(kv_chunk, L)
+    n = -(-L // kvc)
+    pad = n * kvc - L
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad rows must fail the causal test (kpos > qpos), hence +inf-ish
+        kpos = jnp.pad(kpos, (0, pad), constant_values=10 ** 9)
+    # pin (batch, heads) sharding through the chunk scan: unpinned, GSPMD
+    # partitions the banded einsums over the q/kv sequence dims and
+    # all-gathers full-head KV chunks per q block (§Perf cell B)
+    ks = shard(k.reshape(B, n, kvc, H, D).transpose(1, 0, 2, 3, 4),
+               None, "batch", None, "heads", None)
+    vs = shard(v.reshape(B, n, kvc, H, D).transpose(1, 0, 2, 3, 4),
+               None, "batch", None, "heads", None)
+    ps = kpos.reshape(n, kvc)
+
+    def body(carry, inp):
+        acc, m, l = carry
+        kc, vc, pc = inp
+        kc = shard(kc, "batch", None, "heads", None)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = pc[None, :] <= qpos[:, None]                  # causal
+        if window is not None:
+            mask &= pc[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = shard(acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32),
+            "batch", "heads", None, None)
+        return (acc, m_new, l), None
+
+    acc0 = shard(jnp.zeros((B, H, qc, D), jnp.float32),
+                 "batch", "heads", None, None)
+    m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, qc), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
+    return acc, m, l
+
+
+def chunked_attention(q, k, v, *, window: Optional[int] = None,
+                      q_chunk: int = 2048, kv_chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention over flat heads.
+
+    q: (B,Sq,H,D); k/v: (B,Sk,H,D). q_offset: absolute position of q[0]
+    (k is assumed to start at absolute position 0).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    qc = min(q_chunk, Sq)
+    nq = -(-Sq // qc)
+    outs = []
+    for i in range(nq):                      # trace-time loop: banded slices
+        s0 = i * qc
+        s1 = min(Sq, s0 + qc)
+        qi = q[:, s0:s1]
+        qpos = jnp.arange(s0, s1) + q_offset
+        hi = min(Sk, s1 + q_offset)          # causal upper bound
+        lo = 0
+        if window is not None:
+            lo = max(0, s0 + q_offset - (window - 1))
+            lo = (lo // kv_chunk) * kv_chunk
+        acc, m, l = _chunk_attend(qi, k[:, lo:hi], v[:, lo:hi], qpos,
+                                  jnp.arange(lo, hi), window, scale, kv_chunk)
+        outs.append((acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype))
+    out = jnp.concatenate(outs, axis=2) if nq > 1 else outs[0]
+    return out.transpose(0, 2, 1, 3)         # (B,H,S,D) -> (B,S,H,D)
+
+
+def decode_attention(q, cache_k, cache_v, n_heads: int,
+                     pos=None) -> jnp.ndarray:
+    """q: (B,1,Hp,D) vs compact ring cache (B,S,KV,D).
+
+    ``pos``: (B,) absolute positions. Ring rows are valid iff row <= pos
+    (pre-wrap) or unconditionally once pos >= S (steady decode — the
+    dry-run cells). Scores are (B,Hp,1,S) — small even at 500k — so no
+    q/k chunking; the cache is sharded (seq over mesh axes) and XLA
+    inserts the partial softmax collectives.
+    """
+    B, S = cache_k.shape[:2]
+    D = q.shape[-1]
+    hp = q.shape[2]
+    ck = expand_kv(cache_k, n_heads, hp)
+    cv = expand_kv(cache_v, n_heads, hp)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ck,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    if pos is not None:
+        rows = jnp.arange(S)[None, :]
+        valid = (rows <= pos[:, None]) | (pos[:, None] >= S)   # (B,S)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, cv,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block entry points
+# ---------------------------------------------------------------------------
+
+def attn_forward(x, params, *, positions, n_heads, n_kv, window, rope_theta,
+                 compute_dtype, q_offset: int = 0):
+    """Train/prefill. x: (B,S,d). Returns (out, (k, v)) with compact kv."""
+    q, k, v = _proj_qkv(x, params, n_heads, n_kv, compute_dtype)
+    q = layers.apply_rope(q, positions, rope_theta)
+    k = layers.apply_rope(k, positions, rope_theta)
+    hp = q.shape[2]
+    ke = expand_kv(k, n_heads, hp)
+    ve = expand_kv(v, n_heads, hp)
+    o = chunked_attention(q, ke, ve, window=window, q_offset=q_offset)
+    return _proj_out(o, params, n_heads, compute_dtype), (k, v)
+
+
+def attn_decode(x, params, cache, *, position, n_heads, n_kv,
+                rope_theta, compute_dtype):
+    """Decode one token. x: (B,1,d); cache: dict(k,v) of (B,S,KV,D).
+
+    ``position``: (B,) absolute positions (continuous batching: slots may
+    be at different depths). The new roped k/v is written at the ring
+    slot ``position % S`` per batch row; attention masks not-yet-valid
+    ring rows.
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k, v = _proj_qkv(x, params, n_heads, n_kv, compute_dtype)
+    pos = jnp.broadcast_to(position.reshape(-1, 1), (B, 1))
+    q = layers.apply_rope(q, pos, rope_theta)
+    k = layers.apply_rope(k, pos, rope_theta)
+    slot = (pos[:, 0] % S).astype(jnp.int32)                  # (B,)
+    ck = cache["k"].at[jnp.arange(B), slot].set(
+        k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[jnp.arange(B), slot].set(
+        v[:, 0].astype(cache["v"].dtype))
+    o = decode_attention(q, ck, cv, n_heads, pos=pos[:, 0])
+    return _proj_out(o, params, n_heads, compute_dtype), {"k": ck, "v": cv}
+
+
+def init_cache(batch: int, seq: int, n_kv: int, head_dim: int,
+               window: Optional[int], dtype) -> dict:
+    """KV cache arrays; window layers keep a ring buffer of ``window``."""
+    s = min(seq, window) if window is not None else seq
+    shape = (batch, s, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

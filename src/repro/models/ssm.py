@@ -1,0 +1,165 @@
+"""Mamba (selective SSM) block — chunked associative-scan training path
+plus O(1)-state decode step. Used by jamba (hybrid) and available to any
+config via ``BlockSpec(mixer="mamba")``.
+
+Training path: the linear recurrence h_t = exp(dt*A) h_{t-1} + dt*B*x_t
+is computed with ``jax.lax.associative_scan`` *within* fixed-size seq
+chunks and a sequential ``lax.scan`` *across* chunks, bounding the
+(B, L, d_inner, d_state) intermediate at (B, chunk, d_inner, d_state).
+
+Sharding: d_inner maps to the ``ffn`` logical axis (TP over "model");
+the recurrent state is elementwise in d_inner so the scan needs no
+cross-shard communication.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.ops import shard
+
+
+def d_inner_of(d_model: int, expand: int) -> int:
+    return d_model * expand
+
+
+def init_mamba(key, d: int, *, d_state: int, d_conv: int, expand: int,
+               dt_rank: int, stack: Tuple[int, ...], dtype) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    di = d_inner_of(d, expand)
+    s = ("layer",) * len(stack)
+    # A init: -(1..d_state) broadcast, stored as log (mamba reference init)
+    a = jnp.tile(jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)),
+                 (di, 1))
+    a = jnp.broadcast_to(a, stack + (di, d_state)).astype(jnp.float32)
+    return {
+        "in_proj": layers.param(k1, stack + (d, 2 * di),
+                                s + ("embed", "ffn"), dtype),
+        "conv_w": layers.param(k2, stack + (d_conv, di),
+                               s + (None, "ffn"), dtype, scale=0.5),
+        "conv_b": layers.zeros_param(stack + (di,), s + ("ffn",), dtype),
+        "x_proj": layers.param(k3, stack + (di, dt_rank + 2 * d_state),
+                               s + ("ffn", None), dtype),
+        "dt_w": layers.param(k4, stack + (dt_rank, di),
+                             s + (None, "ffn"), dtype),
+        "dt_b": layers.param(k5, stack + (di,), s + ("ffn",), dtype,
+                             scale=1.0),
+        "A_log": layers.annot(a, s + ("ffn", None)),
+        "D": layers.ones_param(stack + (di,), s + ("ffn",), dtype),
+        "out_proj": layers.param(k6, stack + (di, d),
+                                 s + ("ffn", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,L,di); w: (K,di). Returns (B,L,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):                      # K=4: unrolled taps
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _ssm_scan_chunk(h0, dA, dBx, C):
+    """Within-chunk associative scan. h0: (B,di,N); dA/dBx: (B,c,di,N);
+    C: (B,c,N). Returns (h_last, y (B,c,di))."""
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+    cumA, h_loc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = h_loc + cumA * h0[:, None]
+    y = jnp.einsum("bcdn,bcn->bcd", h, C)
+    return h[:, -1], y
+
+
+def mamba_forward(x, params, *, d_state: int, chunk: int = 512,
+                  compute_dtype=jnp.bfloat16):
+    """Train/prefill. x: (B,L,d). Returns (out, cache) — cache holds the
+    final recurrent state + conv tail for decode continuation."""
+    B, L, d = x.shape
+    di = params["in_proj"].shape[-1] // 2
+    dt_rank = params["dt_w"].shape[-2]
+
+    xz = shard(x @ params["in_proj"].astype(compute_dtype),
+               "batch", None, "ffn")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"].astype(compute_dtype),
+                                  params["conv_b"].astype(compute_dtype)))
+    dbc = xc @ params["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_w"].astype(compute_dtype)
+                         + params["dt_b"].astype(compute_dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (di, N)
+
+    dt32, B32, C32 = dt.astype(jnp.float32), Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    x32 = xc.astype(jnp.float32)
+    c = min(chunk, L)
+    n = L // c
+    assert L % c == 0, (L, c)
+
+    def chunk_body(h0, inp):
+        dt_c, B_c, C_c, x_c = inp            # (B,c,di),(B,c,N),(B,c,N),(B,c,di)
+        # pin (batch, ffn) sharding on the scan's dominant intermediates:
+        # without these, GSPMD resolves the scan body by REPLICATING the
+        # batch dim — a 16x inflation of the biggest tensors in the
+        # whole program (EXPERIMENTS.md §Perf iteration 1)
+        dt_c = shard(dt_c, "batch", None, "ffn")
+        x_c = shard(x_c, "batch", None, "ffn")
+        dA = shard(jnp.exp(dt_c[..., None] * A),              # (B,c,di,N)
+                   "batch", None, "ffn", None)
+        dBx = shard(dt_c[..., None] * B_c[:, :, None, :] * x_c[..., None],
+                    "batch", None, "ffn", None)
+        h_last, y = _ssm_scan_chunk(h0, dA, dBx, C_c)
+        return shard(h_last, "batch", "ffn", None), \
+            shard(y, "batch", None, "ffn")
+
+    def to_chunks(t):
+        return t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = shard(jnp.zeros((B, di, d_state), jnp.float32),
+               "batch", "ffn", None)
+    h_last, ys = jax.lax.scan(
+        chunk_body, h0, (to_chunks(dt32), to_chunks(B32), to_chunks(C32),
+                         to_chunks(x32)))
+    y = ys.swapaxes(0, 1).reshape(B, L, di).astype(compute_dtype)
+    y = y + x32.astype(compute_dtype) * params["D"].astype(compute_dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(compute_dtype)
+    K = params["conv_w"].shape[-2]
+    cache = {"h": h_last, "conv": xin[:, L - (K - 1):, :]}
+    return out, cache
+
+
+def mamba_decode(x, params, cache, *, d_state: int, compute_dtype=jnp.bfloat16):
+    """Decode one token. x: (B,1,d). cache: {"h": (B,di,N), "conv": (B,K-1,di)}."""
+    dt_rank = params["dt_w"].shape[-2]
+    xz = x @ params["in_proj"].astype(compute_dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)                         # (B,1,di)
+    conv_in = jnp.concatenate([cache["conv"], xin], axis=1)    # (B,K,di)
+    w = params["conv_w"].astype(compute_dtype)                 # (K,di)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv_in, w)[:, None]
+                     + params["conv_b"].astype(compute_dtype))
+    dbc = xc @ params["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_w"].astype(compute_dtype)
+                         + params["dt_b"].astype(compute_dtype))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt32 = dt[:, 0].astype(jnp.float32)                        # (B,di)
+    dA = jnp.exp(dt32[..., None] * A)                          # (B,di,N)
+    dBx = dt32[..., None] * Bc[:, 0, None, :].astype(jnp.float32) \
+        * xc[:, 0, :, None].astype(jnp.float32)
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))[:, None]
+    y = y.astype(compute_dtype) + xc * params["D"].astype(compute_dtype)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(compute_dtype)
+    return out, {"h": h, "conv": conv_in[:, 1:, :]}
+
+
+def init_mamba_cache(batch: int, d: int, *, d_state: int, d_conv: int,
+                     expand: int, dtype) -> dict:
+    di = d_inner_of(d, expand)
+    return {"h": jnp.zeros((batch, di, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, di), dtype)}

@@ -1,0 +1,300 @@
+"""Model assembly: pattern-period blocks scanned over layers.
+
+A config's ``pattern`` is a period of BlockSpecs (e.g. gemma3:
+5 local + 1 global; jamba: 7 mamba + 1 attn with alternating MoE).
+Parameters for pattern position j are stacked across periods with a
+leading ``layer`` axis, and the model scans over periods — keeping HLO
+size O(pattern) instead of O(num_layers), which is what makes 512-device
+compiles of 48-60 layer models tractable.
+
+Entry points:
+  init_model(cfg, key)         -> annotated param tree (Annot leaves)
+  train_loss(cfg, params, batch)
+  prefill(cfg, params, tokens[, prefix_embeds]) -> (last_logits, caches)
+  decode_step(cfg, params, caches, tokens, pos) -> (logits, caches)
+  init_caches(cfg, batch, cache_len)            -> cache pytree (no prefill)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention, layers, moe, ssm, xlstm
+
+AUX_LB_WEIGHT = 0.01
+AUX_Z_WEIGHT = 0.001
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, spec: BlockSpec, key, stack):
+    km, kf, kn = jax.random.split(key, 3)
+    dtype = _dt(cfg.param_dtype)
+    d = cfg.d_model
+    p = {"norm1": layers.init_rmsnorm(d, stack, dtype)}
+    if spec.mixer in ("attn", "attn_window"):
+        p["mixer"] = attention.init_attention(
+            km, d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            stack, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(
+            km, d, d_state=cfg.mamba_d_state, d_conv=cfg.mamba_d_conv,
+            expand=cfg.mamba_expand, dt_rank=cfg.resolved_dt_rank,
+            stack=stack, dtype=dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(km, d, cfg.num_heads,
+                                      expand=cfg.mlstm_expand,
+                                      stack=stack, dtype=dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.init_slstm(km, d, cfg.num_heads,
+                                      ff_expand=cfg.slstm_ff_expand,
+                                      stack=stack, dtype=dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["norm2"] = layers.init_rmsnorm(d, stack, dtype)
+        p["ffn"] = layers.init_ffn(kf, d, cfg.d_ff, stack, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = layers.init_rmsnorm(d, stack, dtype)
+        p["ffn"] = moe.init_moe(kf, d, cfg.resolved_d_ff_expert,
+                                cfg.num_experts, cfg.num_shared_experts,
+                                stack, dtype)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return p
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    dtype = _dt(cfg.param_dtype)
+    ke, ku, *kb = jax.random.split(key, 2 + len(cfg.pattern))
+    stack = (cfg.num_periods,)
+    p = {
+        "embed": layers.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": [_init_block(cfg, s, kb[j], stack)
+                   for j, s in enumerate(cfg.pattern)],
+        "final_norm": layers.init_rmsnorm(cfg.d_model, (), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.init_embedding(ku, cfg.vocab_size, cfg.d_model,
+                                             dtype, scale=cfg.d_model ** -0.5)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block forward / decode
+# ---------------------------------------------------------------------------
+
+def _block_forward(cfg: ModelConfig, spec: BlockSpec, params, x, positions,
+                   emit_cache: bool):
+    cdt = _dt(cfg.compute_dtype)
+    h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+    cache = None
+    if spec.mixer in ("attn", "attn_window"):
+        out, (k, v) = attention.attn_forward(
+            h, params["mixer"], positions=positions, n_heads=cfg.num_heads,
+            n_kv=cfg.num_kv_heads, window=spec.window,
+            rope_theta=cfg.rope_theta, compute_dtype=cdt)
+        if emit_cache:
+            if spec.window is not None and k.shape[1] > spec.window:
+                # ring alignment: decode writes at slot pos % window, so
+                # roll the kept tail such that row r holds position p with
+                # r == p % window
+                S = k.shape[1]
+                w = spec.window
+                k = jnp.roll(k[:, -w:], S % w, axis=1)
+                v = jnp.roll(v[:, -w:], S % w, axis=1)
+            cache = {"k": k, "v": v}
+    elif spec.mixer == "mamba":
+        out, c = ssm.mamba_forward(h, params["mixer"],
+                                   d_state=cfg.mamba_d_state,
+                                   compute_dtype=cdt)
+        cache = c if emit_cache else None
+    elif spec.mixer == "mlstm":
+        out, c = xlstm.mlstm_forward(h, params["mixer"],
+                                     n_heads=cfg.num_heads, compute_dtype=cdt)
+        cache = c if emit_cache else None
+    elif spec.mixer == "slstm":
+        out, c = xlstm.slstm_forward(h, params["mixer"],
+                                     n_heads=cfg.num_heads, compute_dtype=cdt)
+        cache = c if emit_cache else None
+    x = x + out
+    aux = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if spec.ffn == "dense":
+        h = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        x = x + layers.ffn(h, params["ffn"], cdt)
+    elif spec.ffn == "moe":
+        h = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        out, aux = moe.moe_forward(h, params["ffn"], n_experts=cfg.num_experts,
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   compute_dtype=cdt)
+        x = x + out
+    return x, cache, aux
+
+
+def _block_decode(cfg: ModelConfig, spec: BlockSpec, params, cache, x, pos):
+    cdt = _dt(cfg.compute_dtype)
+    h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_window"):
+        out, cache = attention.attn_decode(
+            h, params["mixer"], cache, position=pos,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            rope_theta=cfg.rope_theta, compute_dtype=cdt)
+    elif spec.mixer == "mamba":
+        out, cache = ssm.mamba_decode(h, params["mixer"], cache,
+                                      d_state=cfg.mamba_d_state,
+                                      compute_dtype=cdt)
+    elif spec.mixer == "mlstm":
+        out, cache = xlstm.mlstm_decode(h, params["mixer"], cache,
+                                        n_heads=cfg.num_heads,
+                                        compute_dtype=cdt)
+    elif spec.mixer == "slstm":
+        out, cache = xlstm.slstm_decode(h, params["mixer"], cache,
+                                        n_heads=cfg.num_heads,
+                                        compute_dtype=cdt)
+    x = x + out
+    if spec.ffn == "dense":
+        h = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        x = x + layers.ffn(h, params["ffn"], _dt(cfg.compute_dtype))
+    elif spec.ffn == "moe":
+        h = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        out, _ = moe.moe_forward(h, params["ffn"], n_experts=cfg.num_experts,
+                                 top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 compute_dtype=_dt(cfg.compute_dtype))
+        x = x + out
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, prefix_embeds):
+    cdt = _dt(cfg.compute_dtype)
+    x = layers.embed(tokens, params["embed"], cdt) * (cfg.d_model ** 0.5)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    return x
+
+
+def _scan_blocks(cfg: ModelConfig, params, x, positions, emit_cache: bool):
+    """Scan over periods; each body applies the full pattern once."""
+    def body(x, period_params):
+        caches, auxes = [], []
+        for j, spec in enumerate(cfg.pattern):
+            fwd = functools.partial(_block_forward, cfg, spec,
+                                    emit_cache=emit_cache)
+            if cfg.remat:
+                fwd = jax.checkpoint(
+                    fwd, policy=jax.checkpoint_policies.nothing_saveable)
+            x, cache, aux = fwd(period_params[j], x, positions)
+            caches.append(cache)
+            auxes.append(aux)
+        aux = jax.tree_util.tree_map(lambda *a: sum(a), *auxes)
+        return x, (tuple(caches) if emit_cache else None, aux)
+
+    x, (caches, aux) = jax.lax.scan(body, x, tuple(params["blocks"]))
+    aux = jax.tree_util.tree_map(jnp.sum, aux)
+    return x, caches, aux
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, prefix_embeds=None,
+                   emit_cache: bool = False):
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    positions = jnp.arange(x.shape[1])[None]
+    x, caches, aux = _scan_blocks(cfg, params, x, positions, emit_cache)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: {"tokens": (B,S), "labels": (B,S)[, "prefix_embeds"]}."""
+    x, _, (lb, z) = forward_hidden(cfg, params, batch["tokens"],
+                                   batch.get("prefix_embeds"),
+                                   emit_cache=False)
+    npfx = 0 if batch.get("prefix_embeds") is None else \
+        batch["prefix_embeds"].shape[1]
+    x_tok = x[:, npfx:]
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    nll = layers.chunked_xent(x_tok, emb, batch["labels"], cfg.logit_chunk,
+                              _dt(cfg.compute_dtype))
+    return nll + AUX_LB_WEIGHT * lb + AUX_Z_WEIGHT * z
+
+
+def _logits(cfg: ModelConfig, params, x):
+    emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return layers.unembed_logits(x, emb, _dt(cfg.compute_dtype))
+
+
+def prefill(cfg: ModelConfig, params, tokens, prefix_embeds=None):
+    x, caches, _ = forward_hidden(cfg, params, tokens, prefix_embeds,
+                                  emit_cache=True)
+    return _logits(cfg, params, x[:, -1:]), caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, caches, tokens, pos):
+    """tokens: (B,1) int32; pos: (B,) int32 absolute positions (slots in a
+    continuous-batching engine may be at different depths).
+    caches: tuple over pattern positions of stacked (periods-leading)
+    caches; attention cache rows are ring buffers at slot pos % S."""
+    cdt = _dt(cfg.compute_dtype)
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    x = layers.embed(tokens, params["embed"], cdt) * (cfg.d_model ** 0.5)
+
+    def body(x, inp):
+        period_params, period_caches = inp
+        new_caches = []
+        for j, spec in enumerate(cfg.pattern):
+            x, c = _block_decode(cfg, spec, period_params[j],
+                                 period_caches[j], x, pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(params["blocks"]), caches))
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(cfg, params, x), new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int):
+    """Build the decode cache pytree directly (dry-run decode cells)."""
+    cdt = _dt(cfg.compute_dtype)
+    out = []
+    for spec in cfg.pattern:
+        if spec.mixer in ("attn", "attn_window"):
+            c = attention.init_cache(batch, cache_len, cfg.num_kv_heads,
+                                     cfg.resolved_head_dim, spec.window, cdt)
+        elif spec.mixer == "mamba":
+            c = ssm.init_mamba_cache(batch, cfg.d_model,
+                                     d_state=cfg.mamba_d_state,
+                                     d_conv=cfg.mamba_d_conv,
+                                     expand=cfg.mamba_expand, dtype=cdt)
+        elif spec.mixer == "mlstm":
+            di = cfg.d_model * cfg.mlstm_expand
+            c = {"state": xlstm.init_mlstm_state(batch, cfg.num_heads,
+                                                 di // cfg.num_heads),
+                 "conv": jnp.zeros((batch, 3, di), cdt)}
+        elif spec.mixer == "slstm":
+            c = {"state": xlstm.init_slstm_state(batch, cfg.num_heads,
+                                                 cfg.d_model // cfg.num_heads)}
+        # stack across periods
+        c = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.num_periods,) + t.shape),
+            c)
+        out.append(c)
+    return tuple(out)

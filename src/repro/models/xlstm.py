@@ -1,0 +1,297 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM stabilized state convention: actual (C, n) = exp(m) * (C_hat, n_hat)
+with per-(batch,head) stabilizer m. Chunkwise-parallel training form:
+within a chunk of length c (b = cumsum(log_f), gb = g - b):
+    m_t   = b_t + M_t,  M_t = max(cummax_s<=t(gb_s), m_prev)
+    w_ts  = exp(gb_s - M_t)               (s <= t)
+    num_t = sum_s w_ts (q_t.k_s/sqrt(d)) v_s + exp(m_prev - M_t) C_prev q_t
+    den_t = sum_s w_ts (q_t.k_s/sqrt(d))   + exp(m_prev - M_t) n_prev.q_t
+    h_t   = num_t / max(|den_t|, exp(-m_t))
+which matches the sequential recurrence exactly (tested vs
+``mlstm_recurrent_ref``).
+
+Both blocks fold their projections per the paper: mLSTM is
+pre-up-projection (x2), sLSTM is post-up-projection (GeGLU x4/3) —
+hence the xlstm config sets d_ff=0.
+
+Sharding note: head counts here are small (4); inner dims are annotated
+unsharded (replicated over "model") — see DESIGN.md §Arch-applicability
+and the hillclimb log for the sequence-sharding follow-up.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _headify(x, n_heads):
+    B, L, di = x.shape
+    return x.reshape(B, L, n_heads, di // n_heads)
+
+
+def _merge(x):
+    B, L, H, Dh = x.shape
+    return x.reshape(B, L, H * Dh)
+
+
+def _head_rmsnorm(h, scale, eps=1e-6):
+    """Per-head groupnorm (rms flavor). h: (B,L,H,Dh); scale: (H*Dh,)."""
+    B, L, H, Dh = h.shape
+    h32 = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(h32), axis=-1, keepdims=True)
+    y = h32 * jax.lax.rsqrt(var + eps)
+    return (_merge(y) * scale.astype(jnp.float32)).astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, n_heads: int, *, expand: int,
+               stack: Tuple[int, ...], dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    di = d * expand
+    s = ("layer",) * len(stack)
+    n = lambda *ax: s + ax
+    return {
+        "w_up": layers.param(ks[0], stack + (d, 2 * di), n("embed", None), dtype),
+        "conv_w": layers.param(ks[1], stack + (4, di), n(None, None), dtype, scale=0.5),
+        "conv_b": layers.zeros_param(stack + (di,), n(None), dtype),
+        "wq": layers.param(ks[2], stack + (di, di), n(None, None), dtype),
+        "wk": layers.param(ks[3], stack + (di, di), n(None, None), dtype),
+        "wv": layers.param(ks[4], stack + (di, di), n(None, None), dtype),
+        "w_if": layers.param(ks[5], stack + (di, 2 * n_heads), n(None, None), dtype),
+        "b_if": layers.zeros_param(stack + (2 * n_heads,), n(None), dtype),
+        "gn_scale": layers.ones_param(stack + (di,), n(None), dtype),
+        "w_down": layers.param(ks[6], stack + (di, d), n(None, "embed"), dtype),
+    }
+
+
+def mlstm_chunked(q, k, v, log_f, g, state, *, chunk: int = 256):
+    """q,k,v: (B,L,H,Dh) (k unscaled); log_f, g: (B,L,H).
+    state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)) stabilized.
+    Returns (h (B,L,H,Dh), final_state)."""
+    B, L, H, Dh = q.shape
+    c = min(chunk, L)
+    n_chunks = L // c
+    assert L % c == 0, (L, c)
+    scale = 1.0 / (Dh ** 0.5)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def to_chunks(t):
+        return t.reshape(B, n_chunks, c, *t.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, inp):
+        C0, n0, m0 = carry
+        qc, kc, vc, lf, gg = inp
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32) * scale
+        vf = vc.astype(jnp.float32)
+        b = jnp.cumsum(lf, axis=1)                         # (B,c,H)
+        gb = gg - b
+        M = jnp.maximum(jax.lax.cummax(gb, axis=1), m0[:, None])   # (B,c,H)
+        s_qk = jnp.einsum("bthd,bshd->bhts", qf, kf)
+        w_log = gb.transpose(0, 2, 1)[:, :, None, :] - \
+            M.transpose(0, 2, 1)[..., None]                # (B,H,t,s)
+        # mask BEFORE exp: for s>t, w_log = gb_s - M_t can exceed exp's
+        # range (M_t is a cummax only up to t); exp-then-mask makes the
+        # forward inf harmless but the backward 0*inf = NaN
+        w = jnp.exp(jnp.where(mask[None, None], w_log, -jnp.inf))
+        sw = s_qk * w                                      # (B,H,t,s)
+        inter = jnp.exp(m0[:, None] - M)                   # (B,c,H)
+        num = jnp.einsum("bhts,bshd->bthd", sw, vf) \
+            + jnp.einsum("bthd,bhde->bthe", qf, C0) * inter[..., None]
+        den = jnp.einsum("bhts->bth", sw) \
+            + jnp.einsum("bthd,bhd->bth", qf, n0) * inter
+        m_t = b + M
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry update (weights relative to M_c at chunk end)
+        Mc = M[:, -1]                                      # (B,H)
+        u = jnp.exp(gb - Mc[:, None])                      # (B,c,H)
+        C1 = jnp.exp(m0 - Mc)[:, :, None, None] * C0 \
+            + jnp.einsum("bsh,bshd,bshe->bhde", u, kf, vf)
+        n1 = jnp.exp(m0 - Mc)[..., None] * n0 \
+            + jnp.einsum("bsh,bshd->bhd", u, kf)
+        m1 = b[:, -1] + Mc
+        return (C1, n1, m1), h
+
+    state, hs = jax.lax.scan(
+        body, state,
+        (to_chunks(q), to_chunks(k), to_chunks(v),
+         to_chunks(log_f.astype(jnp.float32)), to_chunks(g.astype(jnp.float32))))
+    h = hs.swapaxes(0, 1).reshape(B, L, H, Dh)
+    return h.astype(q.dtype), state
+
+
+def mlstm_step(q, k, v, log_f, g, state):
+    """One decode step. q,k,v: (B,H,Dh); log_f,g: (B,H)."""
+    C, n, m = state
+    Dh = q.shape[-1]
+    kf = k.astype(jnp.float32) / (Dh ** 0.5)
+    qf, vf = q.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, g)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(g - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = fp[..., None] * n + ip[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (C, n, m_new)
+
+
+def mlstm_recurrent_ref(q, k, v, log_f, g, state):
+    """Step-by-step oracle for tests. Same shapes as mlstm_chunked."""
+    def body(st, inp):
+        qt, kt, vt, lf, gg = inp
+        h, st = mlstm_step(qt, kt, vt, lf, gg, st)
+        return st, h
+    xs = tuple(t.swapaxes(0, 1) for t in
+               (q, k, v, log_f.astype(jnp.float32), g.astype(jnp.float32)))
+    state, hs = jax.lax.scan(body, state, xs)
+    return hs.swapaxes(0, 1), state
+
+
+def init_mlstm_state(batch: int, n_heads: int, dh: int):
+    return (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, n_heads, dh), jnp.float32),
+            jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def mlstm_forward(x, params, *, n_heads: int, compute_dtype, state=None,
+                  chunk: int = 256):
+    """mLSTM block. x: (B,L,d) (pre-normed). Returns (out, cache)."""
+    B, L, d = x.shape
+    di = params["w_up"].shape[-1] // 2
+    dh = di // n_heads
+    xz = x @ params["w_up"].astype(compute_dtype)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, params["conv_w"].astype(compute_dtype),
+                                  params["conv_b"].astype(compute_dtype)))
+    q = _headify(xc @ params["wq"].astype(compute_dtype), n_heads)
+    k = _headify(xc @ params["wk"].astype(compute_dtype), n_heads)
+    v = _headify(xm @ params["wv"].astype(compute_dtype), n_heads)
+    pre = xc @ params["w_if"].astype(compute_dtype) + params["b_if"].astype(compute_dtype)
+    g, f_pre = jnp.split(pre.astype(jnp.float32), 2, axis=-1)   # (B,L,H) each
+    log_f = jax.nn.log_sigmoid(f_pre)
+    if state is None:
+        state = init_mlstm_state(B, n_heads, dh)
+    h, state = mlstm_chunked(q, k, v, log_f, g, state, chunk=chunk)
+    hn = _head_rmsnorm(h, params["gn_scale"])
+    out = (hn * jax.nn.silu(z)) @ params["w_down"].astype(compute_dtype)
+    K = params["conv_w"].shape[-2]
+    cache = {"state": state, "conv": xm[:, L - (K - 1):, :]}
+    return out, cache
+
+
+def mlstm_decode(x, params, cache, *, n_heads: int, compute_dtype):
+    """x: (B,1,d). cache: {"state": (C,n,m), "conv": (B,K-1,di)}."""
+    xz = x @ params["w_up"].astype(compute_dtype)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], xm], axis=1)      # (B,K,di)
+    w = params["conv_w"].astype(compute_dtype)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv_in, w)[:, None]
+                     + params["conv_b"].astype(compute_dtype))
+    q = _headify(xc @ params["wq"].astype(compute_dtype), n_heads)[:, 0]
+    k = _headify(xc @ params["wk"].astype(compute_dtype), n_heads)[:, 0]
+    v = _headify(xm @ params["wv"].astype(compute_dtype), n_heads)[:, 0]
+    pre = (xc @ params["w_if"].astype(compute_dtype)
+           + params["b_if"].astype(compute_dtype))[:, 0].astype(jnp.float32)
+    g, f_pre = jnp.split(pre, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    h, state = mlstm_step(q, k, v, log_f, g, cache["state"])
+    hn = _head_rmsnorm(h[:, None], params["gn_scale"])
+    out = (hn * jax.nn.silu(z)) @ params["w_down"].astype(compute_dtype)
+    return out, {"state": state, "conv": conv_in[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, n_heads: int, *, ff_expand: float,
+               stack: Tuple[int, ...], dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    dh = d // n_heads
+    ffs = int(round(d * ff_expand / 64)) * 64 or 64
+    s = ("layer",) * len(stack)
+    n = lambda *ax: s + ax
+    return {
+        "w_in": layers.param(ks[0], stack + (d, 4 * d), n("embed", None), dtype),
+        "b_in": layers.zeros_param(stack + (4 * d,), n(None), dtype),
+        "r": layers.param(ks[1], stack + (n_heads, dh, 4 * dh),
+                          n(None, None, None), dtype),
+        "gn_scale": layers.ones_param(stack + (d,), n(None), dtype),
+        "ff_up": layers.param(ks[2], stack + (d, 2 * ffs), n("embed", None), dtype),
+        "ff_down": layers.param(ks[3], stack + (ffs, d), n(None, "embed"), dtype),
+    }
+
+
+def _slstm_gate_step(pre, st):
+    """pre: (B,H,4*dh) gate preacts; st: (c,n,h,m) each (B,H,dh) (m: (B,H,dh))."""
+    c, n, h, m = st
+    z_p, i_p, f_p, o_p = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z_p)
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, i_p)
+    ip = jnp.exp(i_p - m_new)
+    fp = jnp.exp(log_f + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = jax.nn.sigmoid(o_p) * (c / jnp.maximum(n, 1e-6))
+    return (c, n, h, m_new)
+
+
+def slstm_scan(pre_x, r, state):
+    """pre_x: (B,L,H,4*dh) input-side preacts; r: (H,dh,4*dh).
+    Returns h: (B,L,H,dh), final state."""
+    def body(st, pre_t):
+        rec = jnp.einsum("bhd,hde->bhe", st[2], r.astype(jnp.float32))
+        st = _slstm_gate_step(pre_t + rec, st)
+        return st, st[2]
+    state, hs = jax.lax.scan(body, state, pre_x.swapaxes(0, 1).astype(jnp.float32))
+    return hs.swapaxes(0, 1), state
+
+
+def init_slstm_state(batch: int, n_heads: int, dh: int):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return (z, z + 1e-6, z, z - 1e30)
+
+
+def slstm_forward(x, params, *, n_heads: int, compute_dtype, state=None):
+    """sLSTM block (incl. folded post-FFN). x: (B,L,d) pre-normed."""
+    B, L, d = x.shape
+    dh = d // n_heads
+    pre = x @ params["w_in"].astype(compute_dtype) + params["b_in"].astype(compute_dtype)
+    pre = pre.reshape(B, L, n_heads, 4 * dh)
+    if state is None:
+        state = init_slstm_state(B, n_heads, dh)
+    h, state = slstm_scan(pre, params["r"], state)
+    hn = _head_rmsnorm(h.astype(compute_dtype), params["gn_scale"])
+    up = hn @ params["ff_up"].astype(compute_dtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ params["ff_down"].astype(compute_dtype)
+    return out, {"state": state}
+
+
+def slstm_decode(x, params, cache, *, n_heads: int, compute_dtype):
+    out, cache2 = slstm_forward(x, params, n_heads=n_heads,
+                                compute_dtype=compute_dtype,
+                                state=cache["state"])
+    return out, cache2

@@ -1,0 +1,57 @@
+"""Collective / sharding-constraint helpers.
+
+``shard(x, *logical_axes)`` applies a with_sharding_constraint when a
+mesh context has been installed via ``use_mesh``; it is a no-op in
+single-device tests so model code can call it unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict):
+    prev = dict(_STATE)
+    _STATE["mesh"] = mesh
+    _STATE["rules"] = rules
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def data_group_count() -> int:
+    """Number of data-parallel shards in the installed mesh context (1
+    when tracing without a mesh). Model code uses this for locality-
+    aware grouping (e.g. per-data-shard MoE dispatch, §Perf iter 4)."""
+    mesh, rules = _STATE["mesh"], _STATE["rules"]
+    if mesh is None:
+        return 1
+    size = 1
+    for a in rules.get("batch", ()):
+        size *= mesh.shape[a]
+    return size
+
+
+def shard(x, *logical):
+    mesh, rules = _STATE["mesh"], _STATE["rules"]
+    if mesh is None:
+        return x
+    entries = []
+    for dim, ax in zip(x.shape, logical):
+        mapped = rules.get(ax, ()) if ax is not None else ()
+        size = 1
+        for a in mapped:
+            size *= mesh.shape[a]
+        if mapped and dim % size == 0:
+            entries.append(mapped if len(mapped) > 1 else mapped[0])
+        else:
+            entries.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

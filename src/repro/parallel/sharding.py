@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters carry logical axis names from their ``Annot`` construction
+(see models/layers.py). This module resolves them to ``PartitionSpec``s
+for a concrete mesh, with divisibility guards: a dim whose size does not
+divide by the mapped mesh-axis product silently falls back to replicated
+(and the fallback is queryable for the roofline report — no silent
+performance cliffs: ``explain_fallbacks``).
+
+Default rules (see DESIGN.md §4):
+  embed  -> FSDP over "data" (ZeRO-3-style; scan body all-gathers weights)
+  vocab/heads/ffn/expert -> TP/EP over "model"
+  kv_heads -> "model" iff divisible (musicgen), else replicated
+  batch  -> ("pod","data"); decode KV cache seq -> "model" (+"data" at B=1)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Tuple[str, ...]]:
+    names = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in names)
+    return {
+        "embed": ("data",),
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "expert": ("model",),
+        "batch": batch,
+        "head_dim": (),
+        "layer": (),
+    }
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def spec_for_leaf(shape, axes, mesh: Mesh, rules, fallbacks=None) -> P:
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mapped = rules.get(ax, ()) if ax is not None else ()
+        if mapped and dim % _axis_size(mesh, mapped) == 0:
+            entries.append(mapped if len(mapped) > 1 else mapped[0])
+        else:
+            if mapped and fallbacks is not None:
+                fallbacks.append((ax, dim, mapped))
+            entries.append(None)
+    return P(*entries)
+
+
+def param_shardings(params_shapes, axes_tree, mesh: Mesh,
+                    rules: Optional[dict] = None, collect_fallbacks=None):
+    """params_shapes: pytree of arrays or ShapeDtypeStructs; axes_tree: the
+    matching logical-axes tree. Returns a NamedSharding pytree."""
+    rules = rules if rules is not None else default_rules(mesh)
+
+    def one(leaf, axes):
+        spec = spec_for_leaf(leaf.shape, axes, mesh, rules, collect_fallbacks)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(
+        one, params_shapes, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_sharding(mesh: Mesh, rules: Optional[dict] = None) -> NamedSharding:
+    rules = rules if rules is not None else default_rules(mesh)
+    b = rules["batch"]
+    return NamedSharding(mesh, P(b if len(b) > 1 else (b[0] if b else None)))
+
+
+def data_batch_specs(mesh: Mesh, batch_tree, rules: Optional[dict] = None):
+    """Shard dim 0 (global batch) of every leaf in a data batch.
+
+    Leaves whose dim 0 does not divide the batch mesh axes (e.g. the
+    batch=1 long-context decode cell, or scalar positions) replicate."""
+    rules = rules if rules is not None else default_rules(mesh)
+    bax = rules["batch"]
+    size = _axis_size(mesh, bax)
+
+    def one(leaf):
+        if len(leaf.shape) == 0 or leaf.shape[0] % size or not bax:
+            return NamedSharding(mesh, P())
+        spec = [bax if len(bax) > 1 else bax[0]] + \
+            [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(cfg, caches_shapes, mesh: Mesh, batch: int):
+    """Decode KV-cache shardings.
+
+    Attention k/v caches: (periods, B, S, KV, D): batch over ("pod","data")
+    when it divides; cache seq over "model" (B>1) or ("data","model")
+    (B==1, long-context) so a 500k cache spreads across the pod.
+    Recurrent (mamba/xlstm) states: batch-sharded; d_inner over "model"
+    where annotated.
+    """
+    names = mesh.axis_names
+    bax = tuple(a for a in ("pod", "data") if a in names)
+    b_ok = batch % _axis_size(mesh, bax) == 0 and batch > 1
+
+    def seq_axes(seq_dim: int):
+        if batch == 1:
+            cand = ("data", "model")
+        else:
+            cand = ("model",)
+        return cand if seq_dim % _axis_size(mesh, cand) == 0 else ()
+
+    def one(leaf):
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        if len(shp) >= 2 and shp[1] == batch and b_ok:
+            spec[1] = bax if len(bax) > 1 else bax[0]
+        if len(shp) == 5:                      # (periods,B,S,KV,D) attn cache
+            sa = seq_axes(shp[2])
+            if sa:
+                spec[2] = sa if len(sa) > 1 else sa[0]
+        if len(shp) == 4 and shp[-1] != shp[-2]:  # (periods,B,di,N) mamba h
+            if shp[2] % mesh.shape["model"] == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, caches_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,136 @@
+"""Batched serving engine: continuous batching over fixed decode slots.
+
+The engine owns ``slots`` concurrent sequences (shape-stable for jit):
+new requests claim free slots, prefill runs per-request (chunked), the
+decode step advances every active slot each tick, finished sequences
+free their slot immediately for a waiting request — vLLM-style
+continuous batching, shape-static so the decode step compiles once.
+
+ZC² tie-in: this is the cloud-side oracle path of the paper's runtime —
+uploaded frames/token-spans are scored by a zoo model served here
+(examples/zc2_text_query.py drives it through the same API).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+        self.caches = transformer.init_caches(cfg, slots, cache_len)
+        self.active: Dict[int, Optional[Request]] = {i: None
+                                                     for i in range(slots)}
+        self.pos = np.zeros(slots, np.int64)
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: transformer.decode_step(cfg, p, c, tok, pos))
+
+    # -- API -----------------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, rid: Optional[int] = None) -> int:
+        rid = rid if rid is not None else len(self.queue) + 1000
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
+        """Drive to completion; returns rid -> generated tokens."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_ticks):
+            self._admit(results)
+            if not any(r is not None for r in self.active.values()):
+                if not self.queue:
+                    break
+                continue
+            self._tick(results)
+        return results
+
+    # -- internals -------------------------------------------------------------
+
+    def _admit(self, results: Dict[int, List[int]]) -> None:
+        for slot, r in self.active.items():
+            if r is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(slot, req)
+                if len(req.out) >= req.max_new:      # max_new == 1
+                    req.done = True
+                    results[req.rid] = req.out
+                else:
+                    self.active[slot] = req
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Per-request prefill; writes the slot's cache rows AND samples
+        the request's first token from the prefill logits (ticks then
+        feed out[-1] — never re-process the last prompt token)."""
+        S = len(req.prompt)
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        first_logits, caches = transformer.prefill(self.cfg, self.params,
+                                                   toks)
+        # splice this request's cache rows into the engine cache at ``slot``;
+        # prompt occupies ring rows [0, S) (right-pad; attention masks the
+        # not-yet-valid tail via per-slot positions)
+        def splice(engine_c, new_c):
+            if engine_c.ndim < 2 or engine_c.shape[1] != self.slots or \
+                    new_c.ndim != engine_c.ndim:
+                return engine_c
+            tgt, src = engine_c, new_c
+            if src.shape[2:] != tgt.shape[2:]:
+                # attention k/v: (periods, b, S, KV, D) — pad/crop seq rows
+                pad = tgt.shape[2] - src.shape[2]
+                if pad > 0:
+                    src = jnp.pad(src, [(0, 0), (0, 0), (0, pad)] +
+                                  [(0, 0)] * (src.ndim - 3))
+                elif pad < 0:
+                    src = src[:, :, -tgt.shape[2]:]
+            return tgt.at[:, slot:slot + 1].set(src.astype(tgt.dtype))
+        self.caches = jax.tree_util.tree_map(splice, self.caches, caches)
+        self.pos[slot] = S
+        req.out.append(int(self._sample(first_logits)[0]))
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        self.rng, k = jax.random.split(self.rng)
+        return np.asarray(jax.random.categorical(
+            k, logits[:, -1, :] / self.temperature))
+
+    def _tick(self, results: Dict[int, List[int]]) -> None:
+        last = np.zeros((self.slots, 1), np.int32)
+        for slot, r in self.active.items():
+            if r is not None:
+                last[slot, 0] = (r.out[-1] if r.out else r.prompt[-1])
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(last),
+            jnp.asarray(self.pos, jnp.int32))
+        nxt = self._sample(logits)
+        for slot, r in list(self.active.items()):
+            if r is None:
+                continue
+            r.out.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            if len(r.out) >= r.max_new or self.pos[slot] >= self.cache_len:
+                r.done = True
+                results[r.rid] = r.out
+                self.active[slot] = None     # slot freed immediately

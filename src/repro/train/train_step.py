@@ -1,0 +1,48 @@
+"""Jittable train / prefill / decode step builders.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+(params, opt_state, batch) -> (params, opt_state, metrics) suitable for
+jax.jit with explicit in/out shardings (see launch/dryrun.py and
+launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg, opt_cfg: opt.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss_fn = lambda p: transformer.train_loss(cfg, p, batch)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = opt.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return transformer.prefill(cfg, params, batch["tokens"],
+                                   batch.get("prefix_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, caches, batch):
+        logits, caches = transformer.decode_step(
+            cfg, params, caches, batch["tokens"], batch["pos"])
+        return logits, caches
+    return decode_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        return transformer.train_loss(cfg, params, batch)
+    return eval_step

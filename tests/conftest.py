@@ -1,0 +1,42 @@
+"""Shared fixtures. Tests run on the single CPU device (the dry-run's
+512-device forcing is confined to launch/dryrun.py, never set here)."""
+import os
+import sys
+from pathlib import Path
+
+# Allow `pytest tests/` without PYTHONPATH=src as well.
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# JAX tracing makes per-example time large; cap examples and disable
+# the too-slow health checks rather than shrinking coverage to nothing.
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def small_video():
+    """A 0.25 h (900-frame) synthetic scene with strong skews."""
+    from repro.core.video import Video, corpus
+    return Video(corpus(hours=0.25)["Banff"])
+
+
+@pytest.fixture(scope="session")
+def small_store(small_video):
+    from repro.core import landmarks as lm
+    from repro.core.hardware import YOLO_V3
+    return lm.build_landmarks(small_video, 30, YOLO_V3)
+
+
+@pytest.fixture(scope="session")
+def results_dir():
+    return Path(__file__).resolve().parent.parent / "results"

@@ -1,0 +1,168 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp
+oracles in kernels/ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.conv_scorer import conv_scorer
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels import ops as kops
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill): causal / window, shape + dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,D", [(1, 128, 1, 32), (2, 256, 2, 64),
+                                     (1, 512, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (_rand(kk, (B, S, H, D), dtype) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_window(window):
+    B, S, H, D = 1, 256, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (_rand(kk, (B, S, H, D), jnp.float32) for kk in ks)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_suffix_alignment():
+    """Sq < Sk: q rows attend as the final Sq positions of k."""
+    B, Sq, Sk, H, D = 1, 128, 256, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, Sq, H, D), jnp.float32)
+    k = _rand(ks[1], (B, Sk, H, D), jnp.float32)
+    v = _rand(ks[2], (B, Sk, H, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_blocksizes_equal():
+    """Output is invariant to the tiling choice."""
+    B, S, H, D = 1, 256, 1, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (_rand(kk, (B, S, H, D), jnp.float32) for kk in ks)
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=256, block_k=64, interpret=True)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (split-KV flash decoding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,D", [(1, 512, 2, 64), (2, 1024, 4, 64),
+                                     (1, 2048, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, H, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(ks[0], (B, H, D), dtype)
+    k = _rand(ks[1], (B, S, H, D), dtype)
+    v = _rand(ks[2], (B, S, H, D), dtype)
+    out = decode_attention(q, k, v, block_k=256, interpret=True)
+    want = ref.decode_attention(q, k, v)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,d", [(128, 256), (256, 512), (64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rows, d, dtype):
+    kx, ks = jax.random.split(jax.random.PRNGKey(5))
+    x = _rand(kx, (rows, d), dtype)
+    scale = _rand(ks, (d,), dtype)
+    out = rmsnorm(x, scale, block_rows=64, interpret=True)
+    want = ref.rmsnorm(x, scale)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# moe grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 128, 256, 128), (2, 256, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm(E, C, d, f, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(6))
+    x = _rand(kx, (E, C, d), dtype)
+    w = _rand(kw, (E, d, f), dtype)
+    out = moe_gmm(x, w, block_c=128, block_k=128, block_f=128,
+                  interpret=True)
+    want = ref.moe_gmm(x, w)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                    rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                    atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv scorer (ZC2 operator hot-spot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,HW,Cin,Cout", [(8, 32, 3, 8), (4, 25, 3, 16),
+                                           (2, 50, 8, 8)])
+def test_conv_scorer(N, HW, Cin, Cout):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(kx, (N, HW, HW, Cin), jnp.float32)
+    w = _rand(kw, (3, 3, Cin, Cout), jnp.float32)
+    b = _rand(kb, (Cout,), jnp.float32)
+    out = conv_scorer(x, w, b, stride=2, interpret=True)
+    want = ref.conv_scorer(x, w, b, stride=2)
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dispatch wrappers: use_pallas flips the hot path, results agree
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_attention():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q, k, v = (_rand(kk, (1, 128, 2, 64), jnp.float32) for kk in ks)
+    base = kops.attention(q, k, v, causal=True)           # jnp path
+    with kops.use_pallas(True, interpret=True):
+        assert kops.enabled()
+        pal = kops.attention(q, k, v, causal=True)
+    assert not kops.enabled()
+    assert_allclose(np.asarray(base), np.asarray(pal), rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_rmsnorm():
+    kx, ks = jax.random.split(jax.random.PRNGKey(9))
+    x = _rand(kx, (64, 128), jnp.float32)
+    s = _rand(ks, (128,), jnp.float32)
+    base = kops.rmsnorm(x, s)
+    with kops.use_pallas(True, interpret=True):
+        pal = kops.rmsnorm(x, s)
+    assert_allclose(np.asarray(base), np.asarray(pal), rtol=1e-5, atol=1e-5)

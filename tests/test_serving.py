@@ -1,0 +1,76 @@
+"""Serving engine: continuous batching over fixed decode slots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import layers, transformer as tf
+from repro.serving.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_smoke_config("h2o-danube-1.8b").scaled(remat=False)
+    params = layers.split_annotated(
+        tf.init_model(cfg, jax.random.PRNGKey(0)))[0]
+    return cfg, params
+
+
+def test_engine_completes_requests(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=2, cache_len=64)
+    rids = [eng.submit(np.arange(3 + i) % cfg.vocab_size, max_new=5)
+            for i in range(5)]        # more requests than slots
+    results = eng.run()
+    assert set(results) == set(rids)
+    assert all(len(v) == 5 for v in results.values())
+    assert all(0 <= t < cfg.vocab_size for v in results.values() for t in v)
+
+
+def test_engine_greedy_matches_full_reforward(small_lm):
+    """Engine output (temperature=0) == argmax of a full re-forward at
+    every step — the continuous-batching cache splice is exact."""
+    cfg, params = small_lm
+    prompt = np.array([5, 9, 2, 7, 1], np.int32)
+    steps = 6
+    eng = ServeEngine(cfg, params, slots=2, cache_len=64)
+    rid = eng.submit(prompt, max_new=steps)
+    got = eng.run()[rid]
+
+    seq = list(prompt)
+    want = []
+    for _ in range(steps):
+        logits, _ = tf.prefill(cfg, params, jnp.asarray([seq], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        seq.append(nxt)
+    assert got == want
+
+
+def test_engine_batching_is_isolation_safe(small_lm):
+    """A request's output is identical whether it shares the batch or
+    runs alone (slot isolation)."""
+    cfg, params = small_lm
+    p1 = np.array([5, 9, 2, 7, 1], np.int32)
+    p2 = np.array([3, 3, 8], np.int32)
+    solo = ServeEngine(cfg, params, slots=2, cache_len=64)
+    r = solo.submit(p1, max_new=4)
+    want = solo.run()[r]
+    multi = ServeEngine(cfg, params, slots=2, cache_len=64)
+    ra = multi.submit(p1, max_new=4)
+    rb = multi.submit(p2, max_new=4)
+    got = multi.run()
+    assert got[ra] == want
+
+
+def test_engine_slot_reuse(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=1, cache_len=64)
+    rids = [eng.submit(np.array([1, 2, 3], np.int32), max_new=3)
+            for _ in range(3)]
+    results = eng.run()
+    assert len(results) == 3
+    # deterministic: same prompt, same params -> same continuation
+    outs = [tuple(results[r]) for r in rids]
+    assert len(set(outs)) == 1

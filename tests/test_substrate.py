@@ -1,0 +1,226 @@
+"""Substrate tests: optimizer, checkpointing (fault-tolerance drills),
+data pipeline determinism, elastic re-mesh + straggler policy."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import elastic
+from repro.train import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_optimizes_quadratic():
+    cfg = opt.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = opt.init_opt_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    l0 = float(loss(params))
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state, metrics = opt.apply_updates(cfg, params, grads, state)
+    assert float(loss(params)) < 1e-3 * l0
+    assert int(state.step) == 150
+
+
+def test_adamw_grad_clipping():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=0, clip_norm=1.0,
+                          weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init_opt_state(params)
+    grads = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = opt.apply_updates(cfg, params, grads, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    # scale = clip/(gn) -> effective grad norm 1: m = 0.1*g_scaled
+    # just assert no blow-up in params after one step
+    p2, _, _ = opt.apply_updates(cfg, params, grads, state)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = opt.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    lr0 = float(opt.schedule(cfg, jnp.array(0)))
+    lr5 = float(opt.schedule(cfg, jnp.array(5)))
+    lr10 = float(opt.schedule(cfg, jnp.array(10)))
+    lr100 = float(opt.schedule(cfg, jnp.array(100)))
+    assert lr0 == 0.0
+    assert lr5 == pytest.approx(0.5e-3)
+    assert lr10 == pytest.approx(1e-3)
+    assert lr100 == pytest.approx(0.1e-3, rel=1e-3)
+    # monotone decreasing after warmup
+    lrs = [float(opt.schedule(cfg, jnp.array(s))) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-12 for a, b in zip(lrs, lrs[1:]))
+
+
+def test_weight_decay_matrices_only():
+    cfg = opt.AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=0.5,
+                          clip_norm=1e9)
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((2,))}
+    state = opt.init_opt_state(params)
+    grads = {"mat": jnp.zeros((2, 2)), "vec": jnp.zeros((2,))}
+    p2, _, _ = opt.apply_updates(cfg, params, grads, state)
+    assert float(p2["mat"][0, 0]) < 1.0          # decayed
+    assert float(p2["vec"][0]) == pytest.approx(1.0)  # not decayed
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: atomic commit, rotation, corrupt-fallback, resume
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+            "scalar": jnp.array(7.5)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree, extra={"data_step": 42})
+    out = ckpt.restore_latest(str(tmp_path), tree)
+    assert out is not None
+    restored, manifest = out
+    assert manifest["step"] == 3
+    assert manifest["extra"]["data_step"] == 42
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_rotation(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    dirs = sorted(p.name for p in tmp_path.iterdir() if p.is_dir())
+    assert dirs == [f"step_{s:09d}" for s in (3, 4, 5)]
+
+
+def test_checkpoint_no_tmp_left_behind(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_checkpoint_corrupt_fallback(tmp_path):
+    """Crash-during-commit drill: newest checkpoint truncated -> restore
+    falls back to the previous valid one."""
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    # corrupt the newest: delete a leaf file
+    newest = tmp_path / "step_000000002"
+    victim = next(newest.glob("*.npy"))
+    victim.unlink()
+    out = ckpt.restore_latest(str(tmp_path), tree)
+    assert out is not None
+    _, manifest = out
+    assert manifest["step"] == 1
+
+
+def test_checkpoint_structure_mismatch_fails(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    other = {"different": jnp.zeros(3)}
+    assert ckpt.restore_latest(str(tmp_path), other) is None
+
+
+def test_checkpoint_restore_empty(tmp_path):
+    assert ckpt.restore_latest(str(tmp_path / "nope"), _tree()) is None
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = data_mod.DataConfig(vocab_size=512, batch=4, seq_len=32, seed=7)
+    p1 = data_mod.TokenPipeline(cfg)
+    p2 = data_mod.TokenPipeline(cfg)
+    for step in (0, 1, 99, 1234):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        assert np.array_equal(b1["labels"], b2["labels"])
+    # labels are next-token shifted
+    b = p1.batch_at(5)
+    assert b["tokens"].shape == (4, 32)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_different_steps_differ():
+    cfg = data_mod.DataConfig(vocab_size=512, batch=4, seq_len=32, seed=7)
+    p = data_mod.TokenPipeline(cfg)
+    assert not np.array_equal(p.batch_at(0)["tokens"],
+                              p.batch_at(1)["tokens"])
+
+
+def test_data_tokens_in_range():
+    cfg = data_mod.DataConfig(vocab_size=64, batch=8, seq_len=16, seed=3)
+    b = data_mod.TokenPipeline(cfg).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 64
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh + stragglers
+# ---------------------------------------------------------------------------
+
+def test_plan_remesh_full_pod():
+    p = elastic.plan_remesh(256)
+    assert p == elastic.RemeshPlan(data=16, model=16, grad_accum=1,
+                                   dropped_chips=0)
+
+
+def test_plan_remesh_after_failures():
+    # lose one host of 8 chips: 248 healthy -> data=15 doesn't divide 256
+    p = elastic.plan_remesh(248)
+    assert p is not None
+    assert p.model == 16
+    assert 256 % p.data == 0
+    assert p.data * 16 <= 248
+    assert p.grad_accum * p.data >= 16   # global batch preserved
+
+
+def test_plan_remesh_below_tp_fails():
+    assert elastic.plan_remesh(15) is None
+
+
+@given(st.integers(min_value=16, max_value=600))
+def test_plan_remesh_invariants(n):
+    p = elastic.plan_remesh(n)
+    if p is None:
+        return
+    assert p.data >= 1 and p.model == 16
+    assert p.data * p.model <= n
+    assert 256 % p.data == 0
+    assert p.dropped_chips == n - p.data * 16
+
+
+def test_straggler_monitor_evicts_repeat_offender():
+    m = elastic.StragglerMonitor(k=2.0, strikes_to_evict=2)
+    for step in range(4):
+        for h in ("h0", "h1", "h2", "h3"):
+            m.record(h, 1.0)
+        m.record("slow", 10.0)
+        evicted = m.check()
+    assert "slow" in evicted
+    assert not any(h in evicted for h in ("h0", "h1", "h2", "h3"))
+
+
+def test_straggler_monitor_forgives_one_off():
+    m = elastic.StragglerMonitor(k=2.0, strikes_to_evict=2)
+    for h in ("h0", "h1", "h2"):
+        m.record(h, 1.0)
+    m.record("h3", 10.0)     # one bad step
+    assert m.check() == []
+    for h in ("h0", "h1", "h2", "h3"):
+        m.record(h, 1.0)     # recovers
+    assert m.check() == []

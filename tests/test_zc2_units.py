@@ -1,0 +1,436 @@
+"""ZC2 unit + property tests: video substrate, detector oracle,
+landmarks, skew, upload queue, operator family, upgrade policies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import factory, flow, landmarks as lm_mod, oracle, skew, \
+    upgrade
+from repro.core.hardware import (BRAWNY, RPI3, YOLO_TINY, YOLO_V2, YOLO_V3,
+                                 CameraTier, CloudModel, NetworkModel,
+                                 camera_fps, landmark_interval)
+from repro.core.operators import (OperatorArch, calibrate_thresholds,
+                                  gamma_of, init_operator, score_frames,
+                                  train_operator)
+from repro.core.queue import AsyncUploadQueue
+from repro.core.video import FRAME_H, FRAME_W, QUERY_CLASS, Video, corpus
+
+
+# ---------------------------------------------------------------------------
+# video substrate
+# ---------------------------------------------------------------------------
+
+def test_video_deterministic(small_video):
+    v2 = Video(small_video.spec)
+    assert len(v2.events) == len(small_video.events)
+    assert v2.events[0].t0 == small_video.events[0].t0
+    f1 = small_video.render_frames([10, 500])
+    f2 = v2.render_frames([10, 500])
+    assert np.array_equal(f1, f2)
+
+
+def test_video_gt_vectorized_consistent(small_video):
+    idxs = np.arange(0, 900, 37)
+    vec = small_video.gt_present_vec(idxs, "bus")
+    scalar = np.array([small_video.gt_present(int(i), "bus") for i in idxs])
+    assert np.array_equal(vec, scalar)
+    cvec = small_video.gt_count_vec(idxs, "bus")
+    cscalar = np.array([small_video.gt_count(int(i), "bus") for i in idxs])
+    assert np.array_equal(cvec, cscalar)
+
+
+def test_video_spatial_skew_exists(small_video):
+    """Banff buses concentrate: the 95% region is far below full frame."""
+    boxes = []
+    for i in range(0, small_video.spec.num_frames, 10):
+        boxes += [b for b in small_video.gt_boxes(i, "bus")]
+    heat = np.zeros((FRAME_H, FRAME_W))
+    for (_, y0, x0, y1, x1) in boxes:
+        heat[int(y0):int(np.ceil(y1)), int(x0):int(np.ceil(x1))] += 1
+    region = skew.k_enclosing_region(heat, 0.95)
+    assert skew.region_fraction(region, FRAME_H, FRAME_W) < 0.55
+
+
+def test_corpus_has_15_scenes():
+    c = corpus(hours=0.1)
+    assert len(c) == 15
+    assert set(QUERY_CLASS) == set(c)
+    for name, spec in c.items():
+        assert QUERY_CLASS[name] in {cs.name for cs in spec.classes}
+
+
+def test_render_values_in_range(small_video):
+    f = small_video.render_frames([0, 100])
+    assert f.shape == (2, FRAME_H, FRAME_W, 3)
+    assert f.min() >= 0.0 and f.max() <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# detector oracle
+# ---------------------------------------------------------------------------
+
+def test_oracle_deterministic(small_video):
+    a = oracle.detect(small_video, 123, YOLO_V3)
+    b = oracle.detect(small_video, 123, YOLO_V3)
+    assert a == b
+
+
+def test_oracle_accuracy_ordering(small_video):
+    """Better tiers agree more with ground truth (presence)."""
+    idxs = np.arange(0, small_video.spec.num_frames, 7)
+    gt = small_video.gt_present_vec(idxs, "bus")
+    agree = {}
+    for det in (YOLO_V3, YOLO_V2, YOLO_TINY):
+        got = oracle.present_vec(small_video, idxs, "bus", det)
+        agree[det.name] = float(np.mean(got == gt))
+    assert agree["yolov3"] > agree["yolov2"] > agree["yolov3-tiny"]
+    assert agree["yolov3"] > 0.9
+
+
+def test_oracle_score_separates_classes(small_video):
+    idxs = np.arange(0, small_video.spec.num_frames, 11)
+    gt = small_video.gt_present_vec(idxs, "bus")
+    if gt.sum() < 3 or (~gt).sum() < 3:
+        pytest.skip("degenerate sample")
+    s = oracle.score_vec(small_video, idxs, "bus", YOLO_V3)
+    assert s[gt].mean() > s[~gt].mean() + 0.2
+
+
+# ---------------------------------------------------------------------------
+# landmarks
+# ---------------------------------------------------------------------------
+
+def test_landmarks_regular_interval(small_store, small_video):
+    idxs = small_store.indices
+    assert np.array_equal(np.diff(idxs),
+                          np.full(len(idxs) - 1, small_store.interval))
+    assert idxs[0] == 0
+    assert len(idxs) == -(-small_video.spec.num_frames // 30)
+
+
+def test_landmark_positive_ratio_close_to_truth(small_video, small_store):
+    all_idx = np.arange(small_video.spec.num_frames)
+    gt_pos = oracle.present_vec(small_video, all_idx, "bus", YOLO_V3)
+    est = lm_mod.positive_ratio(small_store, "bus")
+    assert abs(est - gt_pos.mean()) < 0.12
+
+
+def test_landmark_heatmap_matches_skew(small_video, small_store):
+    heat = lm_mod.heatmap(small_store, "bus")
+    assert heat.shape == (FRAME_H, FRAME_W)
+    assert heat.sum() > 0
+    region = skew.k_enclosing_region(heat, 0.95)
+    assert skew.region_fraction(region, FRAME_H, FRAME_W) < 0.7
+
+
+def test_landmark_training_set(small_store):
+    i, l, c = lm_mod.training_set(small_store, "bus")
+    assert len(i) == len(l) == len(c) == len(small_store.landmarks)
+    assert set(np.unique(l)) <= {0.0, 1.0}
+    assert (c[l == 0] == 0).all()
+
+
+def test_temporal_density_sums(small_store, small_video):
+    d = lm_mod.temporal_density(small_store, "bus",
+                                small_video.spec.num_frames, 300)
+    assert d.shape == (3,)
+    assert (d >= 0).all() and (d <= 1).all()
+
+
+def test_landmark_interval_hardware_rule():
+    # Rpi3 runs YOLOv3 at 0.1 FPS -> at 1 FPS video, interval 10
+    assert landmark_interval(RPI3, YOLO_V3, 1.0) == 10
+    # brawnier camera -> shorter interval; cheaper detector -> shorter
+    assert landmark_interval(BRAWNY, YOLO_V3, 1.0) < 10
+    assert landmark_interval(RPI3, YOLO_TINY, 1.0) < 10
+
+
+# ---------------------------------------------------------------------------
+# skew: k-enclosing region properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 0.99))
+@settings(max_examples=20)
+def test_k_enclosing_coverage_property(seed, coverage):
+    rng = np.random.default_rng(seed)
+    heat = np.zeros((FRAME_H, FRAME_W))
+    cy, cx = rng.uniform(10, FRAME_H - 10), rng.uniform(10, FRAME_W - 10)
+    ys = np.clip(rng.normal(cy, 6, 300).astype(int), 0, FRAME_H - 1)
+    xs = np.clip(rng.normal(cx, 9, 300).astype(int), 0, FRAME_W - 1)
+    np.add.at(heat, (ys, xs), 1.0)
+    y0, x0, y1, x1 = skew.k_enclosing_region(heat, coverage)
+    assert 0 <= y0 < y1 <= FRAME_H and 0 <= x0 < x1 <= FRAME_W
+    assert heat[y0:y1, x0:x1].sum() >= coverage * heat.sum() - 1e-9
+
+
+def test_k_enclosing_empty_heat_full_frame():
+    assert skew.k_enclosing_region(np.zeros((FRAME_H, FRAME_W))) == \
+        (0, 0, FRAME_H, FRAME_W)
+
+
+def test_k_enclosing_tight_cluster_is_small():
+    heat = np.zeros((FRAME_H, FRAME_W))
+    heat[60:72, 20:30] = 5.0
+    region = skew.k_enclosing_region(heat, 0.95)
+    assert skew.region_fraction(region, FRAME_H, FRAME_W) < 0.08
+
+
+def test_rank_spans_orders_by_density():
+    density = np.array([0.1, 0.9, 0.3])
+    spans = skew.rank_spans(density, 100, 300)
+    assert spans == [(100, 200), (200, 300), (0, 100)]
+    # spans partition the range
+    assert sorted(spans) == [(0, 100), (100, 200), (200, 300)]
+
+
+# ---------------------------------------------------------------------------
+# async upload queue (§3 notable design 4)
+# ---------------------------------------------------------------------------
+
+def test_queue_orders_by_score():
+    q = AsyncUploadQueue()
+    q.rank(0.0, 1, 0.2)
+    q.rank(0.0, 2, 0.9)
+    q.rank(0.0, 3, 0.5)
+    got = []
+    while True:
+        idx, _ = q.pop_best(10.0)
+        if idx is None:
+            break
+        q.mark_uploaded(idx)
+        got.append(idx)
+    assert got == [2, 3, 1]
+
+
+def test_queue_causality():
+    """A frame ranked at t=5 is not available at t=4."""
+    q = AsyncUploadQueue()
+    q.rank(5.0, 7, 0.9)
+    idx, t_next = q.pop_best(4.0)
+    assert idx is None and t_next == 5.0
+    idx, _ = q.pop_best(5.0)
+    assert idx == 7
+
+
+def test_queue_rescore_lazy_invalidation():
+    """A later pass re-scores an unsent frame; the stale entry is dead."""
+    q = AsyncUploadQueue()
+    q.rank(0.0, 1, 0.9)
+    q.rank(0.0, 2, 0.8)
+    q.rank(1.0, 2, 0.95)        # re-ranked higher
+    idx, _ = q.pop_best(2.0)
+    assert idx == 2
+    q.mark_uploaded(2)
+    idx, _ = q.pop_best(2.0)
+    assert idx == 1
+    q.mark_uploaded(1)
+    assert q.pop_best(2.0) == (None, None)
+
+
+@given(st.lists(st.tuples(st.floats(0, 100), st.integers(0, 30),
+                          st.floats(0, 1)), min_size=1, max_size=60))
+@settings(max_examples=40)
+def test_queue_property_no_double_upload_no_timetravel(ops):
+    """Model-based: pop everything at increasing times; every frame is
+    popped at most once, never before its rank time."""
+    q = AsyncUploadQueue()
+    rank_time = {}
+    for (t, idx, s) in ops:
+        q.rank(t, idx, s)
+        if idx not in rank_time or t < rank_time[idx]:
+            rank_time.setdefault(idx, t)
+        rank_time[idx] = min(rank_time[idx], t)
+    t = 0.0
+    popped = []
+    while True:
+        idx, t_next = q.pop_best(t)
+        if idx is None:
+            if t_next is None:
+                break
+            t = t_next
+            continue
+        assert t >= rank_time[idx] - 1e-9
+        assert idx not in popped
+        popped.append(idx)
+        q.mark_uploaded(idx)
+    assert sorted(popped) == sorted(rank_time)
+
+
+# ---------------------------------------------------------------------------
+# operator family
+# ---------------------------------------------------------------------------
+
+def test_operator_flops_monotone():
+    small = OperatorArch("s", 2, 8, 16, 25)
+    big = OperatorArch("b", 5, 32, 64, 100)
+    assert big.flops > 20 * small.flops
+    assert big.param_count > small.param_count
+    assert small.size_bytes == small.param_count * 4.0
+
+
+def test_operator_family_breeding(small_store):
+    heat = lm_mod.heatmap(small_store, "bus")
+    fam = factory.breed(heat, full=True)
+    assert 36 <= len(fam) <= 42
+    names = {a.name for a in fam}
+    assert len(names) == len(fam)
+    regions = {a.region for a in fam}
+    assert None in regions            # full frame always present
+    assert len(regions) >= 2          # plus at least one skew crop
+    prof = factory.profile(fam, RPI3)
+    fps = sorted(p.fps for p in prof)
+    # §8: operators run 27x-1000x realtime (1 FPS video)
+    assert fps[0] > 20 and fps[-1] > 900
+
+
+def test_operator_train_learns(small_video, small_store):
+    """A small operator trained on landmark bootstrap separates classes.
+    Uses "car" (dense in Banff) so the val split has both classes."""
+    from repro.core.training import CloudTrainer, FrameBank
+    bank = FrameBank(small_video)
+    trainer = CloudTrainer(bank, "car", CloudModel(), train_steps=80)
+    i, l, c = lm_mod.training_set(small_store, "car")
+    trainer.add_samples(i, l, c)
+    fi, fl, fc = flow.propagate(small_video, small_store, "car")
+    trainer.add_samples(fi, fl, fc)
+    arch = OperatorArch("t", 5, 32, 64, 100)
+    top = trainer.train(arch)
+    # bootstrap-only pool on a 0.25 h clip: learning signal must be real
+    # (well above chance); full queries grow the pool and the AUC with it
+    assert top.val_auc > 0.62
+    assert 0.0 <= top.gamma <= 1.0
+    lo, hi = top.thresholds
+    assert lo <= hi
+    # the skew crop at least matches the full frame at equal capacity
+    heat = lm_mod.heatmap(small_store, "car")
+    r95 = skew.k_enclosing_region(heat, 0.95)
+    crop = trainer.train(OperatorArch("tc", 5, 32, 64, 100, r95))
+    assert crop.val_auc > 0.6
+
+
+def test_calibrate_thresholds_meets_budget():
+    rng = np.random.default_rng(0)
+    labels = rng.uniform(size=4000) < 0.3
+    scores = np.where(labels, rng.normal(0.7, 0.15, 4000),
+                      rng.normal(0.3, 0.15, 4000))
+    lo, hi = calibrate_thresholds(scores, labels, err=0.02)
+    assert lo <= hi
+    # on the calibration set itself the budget must hold
+    fn = (labels & (scores < lo)).sum() / max(labels.sum(), 1)
+    fp = (~labels & (scores > hi)).sum() / max((~labels).sum(), 1)
+    assert fn <= 0.02 + 1e-9
+    assert fp <= 0.02 + 1e-9
+    g = gamma_of(scores, lo, hi)
+    assert 0.0 < g <= 1.0
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15)
+def test_calibrate_thresholds_property(seed):
+    rng = np.random.default_rng(seed)
+    n = 500
+    labels = rng.uniform(size=n) < rng.uniform(0.05, 0.6)
+    scores = rng.uniform(size=n)
+    if labels.sum() == 0 or (~labels).sum() == 0:
+        return
+    lo, hi = calibrate_thresholds(scores, labels, err=0.01)
+    assert 0.0 <= lo <= hi <= 1.0
+    fn = (labels & (scores < lo)).sum() / labels.sum()
+    fp = (~labels & (scores > hi)).sum() / (~labels).sum()
+    assert fn <= 0.01 + 1e-9 and fp <= 0.01 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# upgrade policies (§6 — paper constants)
+# ---------------------------------------------------------------------------
+
+def _fam(tier=RPI3):
+    return factory.profile(factory.breed(None, full=False), tier)
+
+
+def test_initial_ranker_rule(small_video):
+    prof = _fam()
+    fps_net = NetworkModel().frame_upload_fps     # ~16.7
+    cur = upgrade.initial_ranker(prof, fps_net, r_pos=0.1)
+    # feasibility: f_op * R_pos > 1
+    assert upgrade.f_of(cur, fps_net) * 0.1 > 1.0
+    # most accurate feasible = highest flops among feasible
+    for p in prof:
+        if upgrade.f_of(p, fps_net) * 0.1 > 1.0:
+            assert p.arch.flops <= cur.arch.flops
+
+
+def test_initial_ranker_rare_positives_picks_fastest():
+    prof = _fam()
+    cur = upgrade.initial_ranker(prof, fps_net=1e9, r_pos=1e-9)
+    assert cur.fps == max(p.fps for p in prof)
+
+
+def test_quality_decline_k_rule():
+    assert upgrade.quality_declined(0.1, 0.9)          # 9x drop > k=5
+    assert not upgrade.quality_declined(0.5, 0.9)
+
+
+def test_manhattan_quality_bounds():
+    perfect = upgrade.manhattan_quality(np.array([5., 4, 3, 2, 1]),
+                                        np.array([50., 40, 30, 20, 10]))
+    assert perfect == 0.0
+    reversed_ = upgrade.manhattan_quality(np.array([1., 2, 3, 4, 5]),
+                                          np.array([50., 40, 30, 20, 10]))
+    assert reversed_ > 0.9
+    assert upgrade.manhattan_quality(np.array([1., 2]), np.array([2., 1])) \
+        == 0.0   # too few to judge
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 40))
+@settings(max_examples=25)
+def test_manhattan_quality_properties(seed, n):
+    rng = np.random.default_rng(seed)
+    cam = rng.uniform(size=n)
+    cloud = rng.uniform(size=n)
+    m = upgrade.manhattan_quality(cam, cloud)
+    assert 0.0 <= m <= 1.0 + 1e-9
+    # scale invariance (rank metric)
+    assert upgrade.manhattan_quality(cam * 7 + 1, cloud) == pytest.approx(m)
+
+
+def test_effective_tagging_rate_and_beta_rule():
+    prof = _fam()
+    p = prof[0]
+
+    class T:     # minimal TrainedOp stand-in
+        gamma = 0.5
+    assert upgrade.effective_tagging_rate(p, T(), 10.0) == \
+        pytest.approx(p.fps * 0.5 + 10.0)
+    assert upgrade.should_upgrade_filter(10.0, 20.0)
+    assert not upgrade.should_upgrade_filter(10.0, 19.0)
+
+
+# ---------------------------------------------------------------------------
+# optical flow label amplification
+# ---------------------------------------------------------------------------
+
+def test_flow_propagation(small_video, small_store):
+    fi, fl, fc = flow.propagate(small_video, small_store, "bus")
+    assert len(fi) > len(small_store.landmarks)         # amplification
+    assert fi.min() >= 0 and fi.max() < small_video.spec.num_frames
+    # labels mostly agree with ground truth (tracking noise is bounded)
+    gt = small_video.gt_present_vec(fi, "bus")
+    agree = float(np.mean((fl > 0.5) == gt))
+    assert agree > 0.75
+    assert flow.flow_compute_seconds(small_store, RPI3.effective_flops) < 60
+
+
+# ---------------------------------------------------------------------------
+# hardware model
+# ---------------------------------------------------------------------------
+
+def test_hardware_calibration():
+    assert camera_fps(RPI3, YOLO_V3.flops) == pytest.approx(0.1)
+    n = NetworkModel()
+    assert n.frame_upload_fps == pytest.approx(1e6 / 6e4)
+    assert n.upload_time(n_frames=10) == pytest.approx(0.6)
+    c = CloudModel()
+    t_small = c.train_time(5_000, 100)
+    t_big = c.train_time(2_000_000, 20_000)
+    assert 3.0 <= t_small < t_big <= 45.0
