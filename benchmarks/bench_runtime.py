@@ -1,0 +1,92 @@
+"""Operator-scoring microbenchmark: unjitted jnp vs OperatorRuntime.
+
+Times the pre-refactor scoring path (eager ``score_frames`` per
+1024-chunk, retracing dispatch every call) against the shared
+``OperatorRuntime`` (cached jit, bucketed shapes, backend dispatch)
+over a seeded synthetic workload at three points of the operator
+family's cost range. Prints a table and writes
+``BENCH_operator_runtime.json`` at the repo root so the perf
+trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core.operators import OperatorArch, init_operator, score_frames
+from repro.core.runtime import OperatorRuntime
+
+ROOT = Path(__file__).resolve().parent.parent
+
+ARCHS = [
+    OperatorArch("bench_L2c8s25", 2, 8, 16, 25),
+    OperatorArch("bench_L3c16s50", 3, 16, 32, 50),
+    OperatorArch("bench_L5c32s100", 5, 32, 64, 100),
+]
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # warmup (compile/caches)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _legacy_score(params, crops, chunk: int = 1024):
+    for i in range(0, len(crops), chunk):
+        score_frames(params, crops[i:i + chunk])
+
+
+def run(n_frames: int, reps: int) -> List[dict]:
+    rng = np.random.default_rng(0)
+    rt = OperatorRuntime()
+    rows = []
+    for arch in ARCHS:
+        params = init_operator(arch, jax.random.PRNGKey(0))
+        crops = rng.uniform(
+            size=(n_frames, arch.input_size, arch.input_size, 3)
+        ).astype(np.float32)
+        t_jnp = _time(lambda: _legacy_score(params, crops), reps)
+        t_rt = _time(lambda: rt.score_crops(params, arch, crops), reps)
+        rows.append({
+            "arch": arch.name,
+            "flops_per_frame": arch.flops,
+            "frames": n_frames,
+            "jnp_ms": round(t_jnp * 1e3, 3),
+            "runtime_ms": round(t_rt * 1e3, 3),
+            "jnp_us_per_frame": round(t_jnp / n_frames * 1e6, 2),
+            "runtime_us_per_frame": round(t_rt / n_frames * 1e6, 2),
+            "speedup": round(t_jnp / max(t_rt, 1e-12), 2),
+        })
+    return rows
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import print_table
+    n_frames = 512 if profile_name == "quick" else 2048
+    reps = 3 if profile_name == "quick" else 5
+    rows = run(n_frames, reps)
+    rt = OperatorRuntime()                 # report the selected backend
+    print_table("Operator scoring: unjitted jnp vs OperatorRuntime", rows)
+    out = {
+        "benchmark": "operator_runtime",
+        "backend": rt.backend,
+        "device": jax.default_backend(),
+        "n_frames": n_frames,
+        "reps": reps,
+        "results": rows,
+    }
+    path = ROOT / "BENCH_operator_runtime.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"[bench] wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (fig6_operators, fig9_queries, fig10_counting,
-                        fig11_traffic, fig12_ablation, fig13_landmarks,
-                        roofline)
+from benchmarks import (bench_runtime, fig6_operators, fig9_queries,
+                        fig10_counting, fig11_traffic, fig12_ablation,
+                        fig13_landmarks, roofline)
 
 FIGURES = {
     "fig6": fig6_operators.main,
@@ -26,6 +26,7 @@ FIGURES = {
     "fig12": fig12_ablation.main,
     "fig13": fig13_landmarks.main,
     "roofline": roofline.main,
+    "operator_runtime": bench_runtime.main,
 }
 
 

@@ -16,14 +16,14 @@ are apples-to-apples.
 from __future__ import annotations
 
 import heapq
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
-from repro.core import factory, landmarks as lm_mod, oracle, upgrade
+from repro.core import oracle
 from repro.core.hardware import YOLO_TINY
-from repro.core.operators import score_frames
 from repro.core.query import Progress, QueryEnv
+from repro.core.session import QuerySession
 
 
 # ---------------------------------------------------------------------------
@@ -134,30 +134,20 @@ def optop_retrieval(env: QueryEnv, *, full_family: bool = True) -> Progress:
     n_pos = max(env.n_positives, 1)
     fps_net = env.net.frame_upload_fps
 
-    lms = env.store.in_range(frames[0], frames[-1] + 1)
-    t = env.net.upload_time(n_thumbs=len(lms))
-    prog.bytes_up += len(lms) * env.net.thumbnail_bytes
-    li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
-    env.trainer.add_samples(li, ll, lc)
-    r_pos = lm_mod.positive_ratio(env.store, env.query.cls)
-    # OptOp gets NO long-term-knowledge operator optimization: full-frame
-    # inputs only (the key ZC2 edge it lacks, §8.2-ii)
-    profiled = factory.profile(factory.breed(None, full=full_family),
-                               env.tier)
-    cur = _optop_pick(env, profiled, r_pos)
+    # OptOp gets NO long-term-knowledge operator optimization (full-frame
+    # inputs only — the key ZC2 edge it lacks, §8.2-ii) and no w/o-LM
+    # bootstrap machinery: landmark pull + pool seeding only.
+    ses = QuerySession(env, full_family=full_family, wo_lm_fallback=False,
+                       breed_from_heat=False).bootstrap(prog)
+    t = ses.t
+    cur = _optop_pick(env, ses.profiled, ses.r_pos)
     trained = env.trainer.train(cur.arch)
     t += env.trainer.train_time(cur.arch) + \
         env.cloud.ship_time(cur.arch.size_bytes)
     prog.op_switches.append((t, cur.name))
 
     # single pass, asynchronous rank+upload
-    arch = trained.arch
-    scores = np.empty(n)
-    B = 1024
-    for i in range(0, n, B):
-        crops = env.bank.crops(frames[i:i + B], arch.region, arch.input_size)
-        pr, _ = score_frames(trained.params, crops)
-        scores[i:i + B] = pr
+    scores, _ = ses.score(trained, frames)
     t_cam = t_net = t
     dt_cam = 1.0 / max(cur.fps, 1e-9)
     heap: List = []

@@ -17,9 +17,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core import factory, landmarks as lm_mod, upgrade
-from repro.core.operators import score_frames
+from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
+from repro.core.session import QuerySession
 
 RECENT_WINDOW = 24
 QUALITY_TRIGGER = 0.35        # Manhattan-distance urgency threshold
@@ -28,18 +28,12 @@ QUALITY_TRIGGER = 0.35        # Manhattan-distance urgency threshold
 class MaxCountExecutor:
     def __init__(self, env: QueryEnv, *, full_family: bool = True):
         self.env = env
-        self.full_family = full_family
+        self.session = QuerySession(env, full_family=full_family,
+                                    boot_salt=9)
 
     def _counts(self, trained, idxs: np.ndarray) -> np.ndarray:
-        arch = trained.arch
-        out = np.empty(len(idxs), np.float64)
-        B = 1024
-        for i in range(0, len(idxs), B):
-            crops = self.env.bank.crops(idxs[i:i + B], arch.region,
-                                        arch.input_size)
-            _, cnt = score_frames(trained.params, crops)
-            out[i:i + B] = cnt
-        return out
+        _, cnt = self.session.score(trained, idxs)
+        return cnt
 
     def run(self, max_passes: int = 8) -> Progress:
         env = self.env
@@ -50,32 +44,14 @@ class MaxCountExecutor:
         fps_net = env.net.frame_upload_fps
         rng = np.random.default_rng(env.video.spec.seed * 13 + 2)
 
-        lms = env.store.in_range(frames[0], frames[-1] + 1)
-        t = env.net.upload_time(n_thumbs=len(lms))
-        prog.bytes_up += len(lms) * env.net.thumbnail_bytes
-        li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
-        env.trainer.add_samples(li, ll, lc)
-        # w/o-landmark bootstrap (§8.4): seed the pool with random uploads
-        if env.trainer.n_samples < 30:
-            brng = np.random.default_rng(env.video.spec.seed * 31 + 9)
-            for idx in brng.choice(frames, min(60, n), replace=False):
-                t += 1.0 / fps_net
-                prog.bytes_up += env.net.frame_bytes
-                pos, cnt = env.cloud_verify(int(idx))
-                env.trainer.add_samples([int(idx)], [pos], [cnt])
-        heat = lm_mod.heatmap(env.store, env.query.cls)
-        profiled = factory.profile(
-            factory.breed(heat if heat.sum() > 0 else None,
-                          full=self.full_family), env.tier)
-        r_pos = lm_mod.positive_ratio(env.store, env.query.cls)
-        cur = upgrade.initial_ranker(profiled, fps_net, r_pos)
-        trained = env.trainer.train(cur.arch)
-        t += env.trainer.train_time(cur.arch) + \
-            env.cloud.ship_time(cur.arch.size_bytes)
-        prog.op_switches.append((t, cur.name))
+        # shared bootstrap + initial ranker (count head, §6.3); the op
+        # arrives after train + ship, nothing uploads meanwhile
+        ses = self.session.bootstrap(prog)
+        profiled = ses.profiled
+        cur, trained, t = ses.init_ranker(prog)
 
         # seed best with landmark counts already on the cloud
-        best = max((l.count(env.query.cls) for l in lms), default=0)
+        best = max((l.count(env.query.cls) for l in ses.lms), default=0)
         prog.record(t, best / max(gt_max, 1))
         if best >= gt_max:
             prog.done_t = t

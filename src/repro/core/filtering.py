@@ -23,13 +23,13 @@ authoritatively by the cloud.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Set
+from typing import Deque, Set
 
 import numpy as np
 
-from repro.core import factory, landmarks as lm_mod, upgrade
-from repro.core.operators import score_frames
+from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
+from repro.core.session import QuerySession
 
 LEVELS = (30, 10, 5, 2, 1)
 
@@ -41,22 +41,15 @@ class TaggingExecutor:
         """``use_upgrade``/``use_longterm``: Fig. 12 ablations (no filter
         switches after the initial pick / no spatial-skew crops)."""
         self.env = env
-        self.full_family = full_family
         self.levels = levels
         self.use_upgrade = use_upgrade
-        self.use_longterm = use_longterm
         self.tags = None          # exposed for accuracy checks/tests
+        self.session = QuerySession(env, full_family=full_family,
+                                    use_longterm=use_longterm, boot_salt=8)
 
     def _scores(self, trained, idxs: np.ndarray) -> np.ndarray:
-        arch = trained.arch
-        out = np.empty(len(idxs), np.float64)
-        B = 1024
-        for i in range(0, len(idxs), B):
-            crops = self.env.bank.crops(idxs[i:i + B], arch.region,
-                                        arch.input_size)
-            probs, _ = score_frames(trained.params, crops)
-            out[i:i + B] = probs
-        return out
+        probs, _ = self.session.score(trained, idxs)
+        return probs
 
     def run(self) -> Progress:
         env = self.env
@@ -67,33 +60,12 @@ class TaggingExecutor:
         fps_net = env.net.frame_upload_fps
         dt_net = 1.0 / fps_net
 
-        # landmark pull + bootstrap training set
-        lms = env.store.in_range(frames[0], frames[-1] + 1)
-        t = env.net.upload_time(n_thumbs=len(lms))
-        prog.bytes_up += len(lms) * env.net.thumbnail_bytes
-        li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
-        env.trainer.add_samples(li, ll, lc)
-        # w/o-landmark bootstrap (§8.4): seed the pool with random uploads
-        if env.trainer.n_samples < 30:
-            brng = np.random.default_rng(env.video.spec.seed * 31 + 8)
-            for idx in brng.choice(frames, min(60, n), replace=False):
-                t += dt_net
-                prog.bytes_up += env.net.frame_bytes
-                pos, cnt = env.cloud_verify(int(idx))
-                env.trainer.add_samples([int(idx)], [pos], [cnt])
-        heat = lm_mod.heatmap(env.store, env.query.cls)
-        if not self.use_longterm:          # Fig. 12 ablation
-            heat = np.zeros_like(heat)
-        profiled = factory.profile(
-            factory.breed(heat if heat.sum() > 0 else None,
-                          full=self.full_family), env.tier)
-
-        pick = upgrade.best_filter(profiled, env.trainer, fps_net)
-        assert pick is not None
-        cur, trained, cur_rate = pick
-        t += env.trainer.train_time(cur.arch) + \
-            env.cloud.ship_time(cur.arch.size_bytes)
-        prog.op_switches.append((t, cur.name))
+        # shared bootstrap + initial filter (§6.2): ``t`` lands past the
+        # initial filter's train + ship time
+        ses = self.session.bootstrap(prog)
+        profiled = ses.profiled
+        cur, trained, cur_rate = ses.init_filter(prog)
+        t = ses.t
 
         # tags: 0 untagged | 1 N(cam) | 2 P(cam) | 3 N(cloud) | 4 P(cloud)
         tags = np.zeros(n, np.int8)

@@ -7,8 +7,12 @@ Each operator outputs (presence_logit, count): rankers sort frames by
 presence probability (Retrieval) or predicted count (max-Count);
 filters threshold presence probability with calibrated (lo, hi).
 
-Inference on TPU uses the Pallas ``kernels/conv_scorer`` fast path when
-enabled; the jnp path below is the oracle and the CPU path.
+Batched inference goes through ``core/runtime.OperatorRuntime``, which
+jit-compiles one scoring function per arch signature and dispatches the
+conv stack to the Pallas ``kernels/conv_scorer`` kernel on TPU hosts
+(jnp reference fallback on CPU). The unjitted ``apply_operator`` /
+``score_frames`` below are the mathematical oracle that training and
+the runtime's correctness tests compare against.
 """
 from __future__ import annotations
 
@@ -171,7 +175,10 @@ def train_operator(arch: OperatorArch, params: Optional[dict], crops,
 
 
 def score_frames(params: dict, crops) -> Tuple[np.ndarray, np.ndarray]:
-    """Batched scoring -> (presence_prob, count) as numpy."""
+    """Unjitted reference scoring -> (presence_prob, count) as numpy.
+
+    Executors must NOT call this in per-chunk loops — use
+    ``core/runtime.OperatorRuntime`` (cached jit, backend dispatch)."""
     logit, cnt = apply_operator(params, jnp.asarray(crops, jnp.float32))
     return np.asarray(jax.nn.sigmoid(logit)), np.asarray(cnt)
 

@@ -18,13 +18,14 @@ alpha-band (exponential slow-down) selection of the next operator.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
-from repro.core import factory, landmarks as lm_mod, upgrade
+from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.queue import AsyncUploadQueue
+from repro.core.session import QuerySession
 from repro.core.training import TrainedOp
 
 RECENT_WINDOW = 30
@@ -41,24 +42,18 @@ class RetrievalExecutor:
         (retraining allowed, no switches); no-longterm drops the
         spatial-skew operator crops and the temporal span priority."""
         self.env = env
-        self.full_family = full_family
-        self.use_flow = use_flow
         self.use_upgrade = use_upgrade
-        self.use_longterm = use_longterm
         self.grain = grain_frames or max(1, env.n_frames // 12)
+        self.session = QuerySession(
+            env, full_family=full_family, use_flow=use_flow,
+            use_longterm=use_longterm, boot_salt=7,
+            density_grain=self.grain)
 
     def _score_pass(self, trained: TrainedOp, idxs: np.ndarray) -> np.ndarray:
-        """Real operator inference for all frames of a pass (batched)."""
-        from repro.core.operators import score_frames
-        arch = trained.arch
-        out = np.empty(len(idxs), np.float64)
-        B = 1024
-        for i in range(0, len(idxs), B):
-            crops = self.env.bank.crops(idxs[i:i + B], arch.region,
-                                        arch.input_size)
-            probs, _ = score_frames(trained.params, crops)
-            out[i:i + B] = probs
-        return out
+        """Real operator inference for all frames of a pass (batched
+        through the OperatorRuntime jit cache)."""
+        probs, _ = self.session.score(trained, idxs)
+        return probs
 
     def run(self, max_passes: int = 12) -> Progress:
         env = self.env
@@ -69,44 +64,14 @@ class RetrievalExecutor:
         fps_net = env.net.frame_upload_fps
         dt_net = 1.0 / fps_net
 
-        # 1. landmark pull (thumbnails) + bootstrap training set
-        lms = env.store.in_range(frames[0], frames[-1] + 1)
-        t = env.net.upload_time(n_thumbs=len(lms))
-        prog.bytes_up += len(lms) * env.net.thumbnail_bytes
-        li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
-        env.trainer.add_samples(li, ll, lc)
-        if self.use_flow and len(lms):
-            from repro.core import flow
-            fi, fl, fc = flow.propagate(env.video, env.store, env.query.cls)
-            env.trainer.add_samples(fi, fl, fc)
-        # w/o-landmark bootstrap (§8.4 "w/o LM"): the camera uploads
-        # random unlabeled frames for the cloud to label until a minimal
-        # training pool exists
-        if env.trainer.n_samples < 30:
-            rng = np.random.default_rng(env.video.spec.seed * 31 + 7)
-            for idx in rng.choice(frames, min(60, n), replace=False):
-                t += dt_net
-                prog.bytes_up += env.net.frame_bytes
-                pos, cnt = env.cloud_verify(int(idx))
-                env.trainer.add_samples([int(idx)], [pos], [cnt])
-        r_pos = lm_mod.positive_ratio(env.store, env.query.cls)
-        heat = lm_mod.heatmap(env.store, env.query.cls)
-        density = lm_mod.temporal_density(env.store, env.query.cls,
-                                          env.video.spec.num_frames,
-                                          self.grain)
-        if not self.use_longterm:          # Fig. 12 ablation
-            heat = np.zeros_like(heat)
-            density = np.zeros_like(density)
-
-        # 2. operator family + initial op (§6.1 rule 1)
-        profiled = factory.profile(
-            factory.breed(heat if heat.sum() > 0 else None,
-                          full=self.full_family), env.tier)
-        cur = upgrade.initial_ranker(profiled, fps_net, r_pos)
-        trained = env.trainer.train(cur.arch)
-        arrive = t + env.trainer.train_time(cur.arch) \
-            + env.cloud.ship_time(cur.arch.size_bytes)
-        prog.op_switches.append((arrive, cur.name))
+        # 1.-2. shared bootstrap + initial op (§6.1 rule 1); the camera
+        # keeps uploading while the initial op trains/ships, so ``t``
+        # stays at the bootstrap clock and ``arrive`` is the op's ETA.
+        ses = self.session.bootstrap(prog)
+        t = ses.t
+        density = ses.density
+        profiled = ses.profiled
+        cur, trained, arrive = ses.init_ranker(prog)
 
         q = AsyncUploadQueue()
         found = 0

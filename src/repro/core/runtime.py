@@ -1,0 +1,170 @@
+"""OperatorRuntime — the shared batched scoring engine (§7 fast path).
+
+Every query executor used to carry its own 1024-chunk ``score_frames``
+loop over the unjitted jnp apply, retracing the conv stack on every
+call and never touching the Pallas ``kernels/conv_scorer`` kernel. This
+module centralizes scoring:
+
+  * one jit-compiled apply function per *arch signature*
+    ``(conv_layers, channels, dense, input_size)`` — operators that
+    share a signature (e.g. region variants of the same architecture)
+    share the compiled function;
+  * batches are bucketed to power-of-two sizes (min 64, max ``chunk``)
+    and zero-padded, so compilation sees a handful of stable shapes
+    instead of one per call;
+  * the conv stack dispatches through the Pallas
+    ``kernels/conv_scorer`` backend on TPU hosts with the jnp reference
+    as the CPU fallback (``kernels/ops.conv_scorer_fn``).
+
+Executors reach it through ``QuerySession.score``; the cloud trainer's
+validation scoring goes through ``get_runtime().score_crops``. The
+process-global runtime means a query fleet sharing one host also
+shares one compilation cache.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+ArchSig = Tuple[int, int, int, int]
+
+CHUNK = 1024          # frames per dispatch (bounds crop-cache pressure)
+MIN_BUCKET = 64       # smallest padded batch shape
+
+
+def arch_signature(arch) -> ArchSig:
+    """Shape-relevant part of an OperatorArch: the input region changes
+    *which pixels* are cropped, not the compiled computation."""
+    return (arch.conv_layers, arch.channels, arch.dense, arch.input_size)
+
+
+class OperatorRuntime:
+    """Batched operator scoring with a per-arch jit cache.
+
+    ``backend``: "pallas" | "jnp" | None (auto: pallas iff running on
+    TPU). ``interpret`` runs Pallas kernels in interpreter mode (tests).
+    """
+
+    def __init__(self, *, backend: Optional[str] = None,
+                 interpret: bool = False, chunk: int = CHUNK,
+                 min_bucket: int = MIN_BUCKET):
+        self.backend = backend or kops.default_conv_backend()
+        if self.backend not in ("pallas", "jnp"):
+            raise ValueError(f"unknown conv backend: {self.backend!r}")
+        self.interpret = interpret
+        self.chunk = int(chunk)
+        self.min_bucket = int(min_bucket)
+        self._apply: Dict[ArchSig, Callable] = {}
+        self._traces: Dict[ArchSig, int] = {}
+        self.calls = 0
+        self.frames_scored = 0
+
+    # -- compilation cache ---------------------------------------------------
+
+    def apply_fn(self, arch) -> Callable:
+        """The jit-compiled ``(params, x) -> (probs, counts)`` for an
+        arch — built once per signature per runtime."""
+        sig = arch_signature(arch)
+        fn = self._apply.get(sig)
+        if fn is None:
+            fn = self._build(sig)
+            self._apply[sig] = fn
+        return fn
+
+    def _build(self, sig: ArchSig) -> Callable:
+        conv = kops.conv_scorer_fn(self.backend, interpret=self.interpret)
+
+        def scorer(params, x):
+            # executes at trace time only: counts compilations per sig
+            self._traces[sig] = self._traces.get(sig, 0) + 1
+            h = x
+            for c in params["convs"]:
+                h = conv(h, c["w"], c["b"])
+            h = h.reshape(h.shape[0], -1)
+            h = jax.nn.relu(h @ params["dense"]["w"] + params["dense"]["b"])
+            out = h @ params["head"]["w"] + params["head"]["b"]
+            return jax.nn.sigmoid(out[:, 0]), jax.nn.softplus(out[:, 1])
+
+        return jax.jit(scorer)
+
+    def trace_count(self, arch=None) -> int:
+        if arch is None:
+            return sum(self._traces.values())
+        return self._traces.get(arch_signature(arch), 0)
+
+    @property
+    def n_compiled(self) -> int:
+        return len(self._apply)
+
+    # -- scoring -------------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        b = self.min_bucket
+        while b < n:
+            b <<= 1
+        return min(b, self.chunk)
+
+    def score_crops(self, params: dict, arch, crops
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Score pre-cropped inputs -> (presence_prob, count) as numpy."""
+        x = np.asarray(crops, np.float32)
+        n = x.shape[0]
+        probs = np.empty(n, np.float64)
+        counts = np.empty(n, np.float64)
+        if n == 0:
+            return probs, counts
+        fn = self.apply_fn(arch)
+        self.calls += 1
+        self.frames_scored += n
+        for i in range(0, n, self.chunk):
+            xb = x[i:i + self.chunk]
+            m = xb.shape[0]
+            b = self._bucket(m)
+            if m < b:
+                xb = np.concatenate(
+                    [xb, np.zeros((b - m,) + xb.shape[1:], np.float32)])
+            p, c = fn(params, jnp.asarray(xb))
+            probs[i:i + m] = np.asarray(p, np.float64)[:m]
+            counts[i:i + m] = np.asarray(c, np.float64)[:m]
+        return probs, counts
+
+    def score(self, trained, bank, idxs) -> Tuple[np.ndarray, np.ndarray]:
+        """Score frame indices of a ``TrainedOp`` via a FrameBank,
+        cropping chunk-by-chunk (keeps peak memory at one chunk)."""
+        arch = trained.arch
+        idxs = np.asarray(idxs, np.int64)
+        probs = np.empty(len(idxs), np.float64)
+        counts = np.empty(len(idxs), np.float64)
+        for i in range(0, len(idxs), self.chunk):
+            sel = idxs[i:i + self.chunk]
+            crops = bank.crops(sel, arch.region, arch.input_size)
+            p, c = self.score_crops(trained.params, arch, crops)
+            probs[i:i + len(sel)] = p
+            counts[i:i + len(sel)] = c
+        return probs, counts
+
+
+# -- process-global runtime ---------------------------------------------------
+
+_RUNTIME: Optional[OperatorRuntime] = None
+
+
+def get_runtime() -> OperatorRuntime:
+    """The shared per-process runtime (one compilation cache per host)."""
+    global _RUNTIME
+    if _RUNTIME is None:
+        _RUNTIME = OperatorRuntime()
+    return _RUNTIME
+
+
+def set_runtime(rt: Optional[OperatorRuntime]) -> Optional[OperatorRuntime]:
+    """Swap the process-global runtime (tests/benchmarks); returns the
+    previous one so callers can restore it."""
+    global _RUNTIME
+    prev, _RUNTIME = _RUNTIME, rt
+    return prev

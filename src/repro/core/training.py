@@ -125,10 +125,11 @@ class CloudTrainer:
                             40, self.train_steps))
         params = ops_mod.train_operator(
             arch, params, crops, tl, tc, steps=steps, seed=self.seed)
-        # validate
+        # validate (batched through the shared OperatorRuntime jit cache)
         if len(vi):
+            from repro.core.runtime import get_runtime
             vcrops = self.bank.crops(vi, arch.region, arch.input_size)
-            vs, vcnt = ops_mod.score_frames(params, vcrops)
+            vs, vcnt = get_runtime().score_crops(params, arch, vcrops)
             auc = _auc(vs, vl > 0.5)
             lo, hi = ops_mod.calibrate_thresholds(vs, vl > 0.5,
                                                   self.error_budget)

@@ -3,11 +3,17 @@
 ``use_pallas(True)`` flips the model's hot paths onto the kernels (TPU);
 the default keeps the pure-jnp/XLA paths (CPU dry-run and tests compare
 both). Tests always call kernels with interpret=True.
+
+``conv_scorer_fn`` resolves the conv backend *once* and returns a
+callable with the choice baked in — callers that jit-compile (the
+operator scoring runtime) need a decision that is static per compiled
+function, not read from mutable context-manager state at trace time.
 """
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
+import functools
+from typing import Callable, Optional
 
 import jax
 
@@ -64,3 +70,25 @@ def conv_scorer(x, w, b, *, stride: int = 2):
         return _conv.conv_scorer(x, w, b, stride=stride,
                                  interpret=_STATE["interpret"])
     return ref.conv_scorer(x, w, b, stride)
+
+
+def default_conv_backend() -> str:
+    """Pallas on TPU hosts, the jnp reference everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def conv_scorer_fn(backend: Optional[str] = None, *, stride: int = 2,
+                   interpret: bool = False) -> Callable:
+    """Resolve the conv-scorer backend to a concrete callable.
+
+    Unlike ``conv_scorer`` above, the returned function does not consult
+    ``_STATE`` — the backend is fixed at resolution time, so it is safe
+    to close over inside a jit-compiled scoring function.
+    """
+    backend = backend or default_conv_backend()
+    if backend == "pallas":
+        return functools.partial(_conv.conv_scorer, stride=stride,
+                                 interpret=interpret)
+    if backend == "jnp":
+        return functools.partial(ref.conv_scorer, stride=stride)
+    raise ValueError(f"unknown conv backend: {backend!r}")

@@ -1,0 +1,63 @@
+"""Import guard for the optional ``hypothesis`` test dependency.
+
+Property tests import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly. When hypothesis is installed, these are
+the real objects; when it is absent, ``@given`` turns the test into a
+skip (and the rest of the suite still collects and runs). Install the
+real dependency with ``pip install -e .[test]``.
+"""
+try:
+    from hypothesis import HealthCheck, given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not try to resolve the
+            # property's draw parameters as fixtures
+            def skipper():
+                pytest.skip("hypothesis is not installed")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            return skipper
+        return deco
+
+    class settings:                                     # noqa: N801
+        """No-op stand-in for ``hypothesis.settings`` (decorator +
+        profile registry)."""
+
+        def __init__(self, *_args, **_kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*_args, **_kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*_args, **_kwargs):
+            pass
+
+    class _Strategies:
+        """Any strategy constructor resolves to a dummy callable; the
+        ``@given`` above never invokes it."""
+
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    strategies = _Strategies()
+
+    class HealthCheck:                                  # noqa: N801
+        too_slow = None
+        data_too_large = None
+
+
+st = strategies

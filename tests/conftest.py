@@ -11,12 +11,17 @@ if SRC not in sys.path:
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+TESTS = str(Path(__file__).resolve().parent)
+if TESTS not in sys.path:
+    sys.path.insert(0, TESTS)
+
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
+from _hypothesis_compat import HealthCheck, settings
 
 # JAX tracing makes per-example time large; cap examples and disable
 # the too-slow health checks rather than shrinking coverage to nothing.
+# (No-ops when hypothesis is absent; property tests then self-skip.)
 settings.register_profile(
     "ci", max_examples=25, deadline=None,
     suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])

@@ -13,6 +13,15 @@ from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, load_hlo,
                                  parse_collectives)
 
 
+@pytest.fixture(autouse=True)
+def _require_dryrun_artifacts(results_dir):
+    """These tests validate pre-generated artifacts; skip (don't fail)
+    on hosts that never ran the ~45 min dry-run."""
+    if not (results_dir / "dryrun").exists():
+        pytest.skip("dry-run artifacts absent "
+                    "(generate with `python -m repro.launch.dryrun`)")
+
+
 def _cells(results_dir):
     out = []
     for arch, cell in all_cells():
@@ -73,6 +82,9 @@ def test_multipod_shards_the_pod_axis(results_dir):
     both meshes for every §Perf-touched family (results/dryrun mixes
     artifact provenance after the cache-collision incident — see
     EXPERIMENTS.md §Perf provenance note)."""
+    if not (results_dir / "dryrun_opt").exists():
+        pytest.skip("dryrun_opt artifacts absent (the default dry-run "
+                    "only regenerates results/dryrun)")
     checked = 0
     for arch in ARCH_IDS:
         pod_p = results_dir / "dryrun_opt" / f"{arch}__train_4k__pod.json"

@@ -1,0 +1,173 @@
+"""OperatorRuntime + QuerySession: Pallas/jnp backend parity over the
+operator family's real shapes, jit-cache reuse (one trace per arch),
+backend auto-selection, and executor Progress equivalence between the
+runtime fast path and the pre-refactor per-chunk eager scoring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.operators import (OperatorArch, init_operator, score_frames)
+from repro.core.query import Query, make_env
+from repro.core.runtime import (OperatorRuntime, arch_signature, get_runtime,
+                                set_runtime)
+from repro.core.training import FrameBank
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.conv_scorer import conv_scorer
+
+
+# ---------------------------------------------------------------------------
+# backend parity: Pallas (interpret) vs jnp reference, family shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("size", [25, 50, 100])
+@pytest.mark.parametrize("ch", [8, 16, 32])
+@pytest.mark.parametrize("first_layer", [True, False])
+def test_conv_scorer_parity_family_shapes(size, ch, first_layer):
+    """The kernel must match the reference on every (input size, width)
+    the factory breeds: first layers see Cin=3, deeper layers Cin=Cout."""
+    cin = 3 if first_layer else ch
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(size * 97 + ch), 3)
+    x = jax.random.normal(kx, (6, size, size, cin), jnp.float32)
+    w = jax.random.normal(kw, (3, 3, cin, ch), jnp.float32)
+    b = jax.random.normal(kb, (ch,), jnp.float32)
+    out = conv_scorer(x, w, b, stride=2, interpret=True)
+    want = ref.conv_scorer(x, w, b, 2)
+    assert out.shape == want.shape
+    assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_runtime_pallas_backend_matches_jnp_end_to_end():
+    """Whole scoring stack (convs + dense + heads) agrees across backends."""
+    arch = OperatorArch("rt_pal", 3, 16, 32, 50)
+    params = init_operator(arch, jax.random.PRNGKey(2))
+    crops = np.random.default_rng(2).uniform(
+        size=(40, 50, 50, 3)).astype(np.float32)
+    pj, cj = OperatorRuntime(backend="jnp").score_crops(params, arch, crops)
+    pp, cp = OperatorRuntime(backend="pallas", interpret=True).score_crops(
+        params, arch, crops)
+    assert_allclose(pp, pj, rtol=1e-4, atol=1e-5)
+    assert_allclose(cp, cj, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# jit cache: one compiled fn / one trace per arch signature
+# ---------------------------------------------------------------------------
+
+def test_runtime_single_trace_per_arch_across_calls():
+    arch = OperatorArch("rt_cache", 2, 8, 16, 25)
+    params = init_operator(arch, jax.random.PRNGKey(1))
+    rt = OperatorRuntime(backend="jnp")
+    rng = np.random.default_rng(1)
+    # varying batch sizes inside one padding bucket: no retracing
+    for n in (100, 128, 77, 128, 100):
+        crops = rng.uniform(size=(n, 25, 25, 3)).astype(np.float32)
+        rt.score_crops(params, arch, crops)
+    assert rt.trace_count(arch) == 1
+    assert rt.n_compiled == 1
+    # a region variant shares the signature -> shares the compiled fn
+    cropped = OperatorArch("rt_cache_r95", 2, 8, 16, 25,
+                           region=(10, 10, 60, 60))
+    assert arch_signature(cropped) == arch_signature(arch)
+    rt.score_crops(params, cropped,
+                   rng.uniform(size=(96, 25, 25, 3)).astype(np.float32))
+    assert rt.n_compiled == 1
+    assert rt.trace_count() == 1
+    # a different signature compiles exactly one more function
+    other = OperatorArch("rt_cache2", 3, 16, 32, 50)
+    p2 = init_operator(other, jax.random.PRNGKey(3))
+    rt.score_crops(p2, other,
+                   rng.uniform(size=(64, 50, 50, 3)).astype(np.float32))
+    assert rt.n_compiled == 2
+    assert rt.trace_count(other) == 1
+
+
+def test_runtime_matches_eager_reference_bitwise():
+    """The jitted jnp path is numerically identical to the unjitted
+    ``score_frames`` oracle (this is what makes the executor refactor
+    behavior-preserving)."""
+    arch = OperatorArch("rt_ref", 3, 16, 32, 50)
+    params = init_operator(arch, jax.random.PRNGKey(0))
+    crops = np.random.default_rng(0).uniform(
+        size=(300, 50, 50, 3)).astype(np.float32)
+    p, c = OperatorRuntime(backend="jnp").score_crops(params, arch, crops)
+    ep, ec = score_frames(params, crops)
+    assert_allclose(p, np.asarray(ep, np.float64), rtol=0, atol=0)
+    assert_allclose(c, np.asarray(ec, np.float64), rtol=0, atol=0)
+
+
+def test_runtime_backend_auto_selection(monkeypatch):
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert kops.default_conv_backend() == "pallas"
+    assert OperatorRuntime().backend == "pallas"
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert kops.default_conv_backend() == "jnp"
+    assert OperatorRuntime().backend == "jnp"
+
+
+def test_runtime_empty_and_padded_edges():
+    arch = OperatorArch("rt_edge", 2, 8, 16, 25)
+    params = init_operator(arch, jax.random.PRNGKey(4))
+    rt = OperatorRuntime(backend="jnp")
+    p, c = rt.score_crops(params, arch,
+                          np.empty((0, 25, 25, 3), np.float32))
+    assert p.shape == (0,) and c.shape == (0,)
+    # a 1-frame batch pads to the min bucket and still returns 1 result
+    one = np.random.default_rng(5).uniform(
+        size=(1, 25, 25, 3)).astype(np.float32)
+    p, c = rt.score_crops(params, arch, one)
+    assert p.shape == (1,)
+    ep, _ = score_frames(params, one)
+    assert_allclose(p, np.asarray(ep, np.float64), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# refactor equivalence: Progress identical to pre-refactor scoring
+# ---------------------------------------------------------------------------
+
+class _LegacyRuntime(OperatorRuntime):
+    """Pre-refactor behavior: eager unjitted ``score_frames`` per chunk
+    (exactly the loop each executor used to carry)."""
+
+    def score_crops(self, params, arch, crops):
+        probs, counts = score_frames(params, crops)
+        return (np.asarray(probs, np.float64),
+                np.asarray(counts, np.float64))
+
+
+def _retrieval_env(video, store, bank):
+    return make_env(video, Query("retrieval", "car"), store, bank=bank,
+                    train_steps=40)
+
+
+def test_executor_progress_equivalent_to_legacy_scoring(small_video,
+                                                        small_store):
+    """Seeded RetrievalExecutor runs produce byte-identical Progress
+    (found fraction, done_t, bytes_up) whether scoring goes through the
+    OperatorRuntime jit cache or the pre-refactor eager loop."""
+    from repro.core.ranking import RetrievalExecutor
+
+    bank = FrameBank(small_video)
+    prev = set_runtime(_LegacyRuntime(backend="jnp"))
+    try:
+        legacy = RetrievalExecutor(
+            _retrieval_env(small_video, small_store, bank),
+            full_family=False).run(max_passes=3)
+    finally:
+        set_runtime(prev)
+
+    prev = set_runtime(OperatorRuntime(backend="jnp"))
+    try:
+        fast = RetrievalExecutor(
+            _retrieval_env(small_video, small_store, bank),
+            full_family=False).run(max_passes=3)
+    finally:
+        set_runtime(prev)
+
+    assert fast.done_t == legacy.done_t
+    assert fast.bytes_up == legacy.bytes_up
+    assert fast.points == legacy.points          # same found fractions/times
+    assert [n for _, n in fast.op_switches] == \
+        [n for _, n in legacy.op_switches]

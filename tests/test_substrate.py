@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 from numpy.testing import assert_allclose
 
 from repro.train import checkpoint as ckpt
