@@ -1,0 +1,142 @@
+"""Fleet microbenchmark: sequential vs interleaved query execution.
+
+Runs the same mixed workload (retrieval / tagging / counting queries
+over several cameras) two ways against fresh ``OperatorRuntime``s:
+
+  sequential   each executor's ``run()`` to completion, one after
+               another (the pre-fleet serving model);
+  fleet        one ``FleetScheduler`` interleaving all steppers with
+               cross-query batched scoring (uncontended uplink, so both
+               modes do identical simulated work — the delta is pure
+               dispatch/batching efficiency).
+
+Reports wall-clock, ``OperatorRuntime.calls`` (dispatch count), and
+frames per dispatch; writes ``BENCH_fleet.json`` at the repo root so
+the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import landmarks as lm
+from repro.core.fleet import FleetScheduler, make_executor
+from repro.core.hardware import YOLO_V3
+from repro.core.query import Query, make_env
+from repro.core.runtime import OperatorRuntime, set_runtime
+from repro.core.training import FrameBank
+from repro.core.video import QUERY_CLASS, Video, corpus
+
+ROOT = Path(__file__).resolve().parent.parent
+
+CAMERAS = ("JacksonH", "Banff", "Miami")
+# 8 mixed queries over 3 cameras (the ROADMAP fleet workload at CI scale)
+WORKLOAD = [("JacksonH", "retrieval"), ("Banff", "retrieval"),
+            ("Miami", "retrieval"), ("JacksonH", "tagging"),
+            ("Banff", "tagging"), ("Miami", "count_max"),
+            ("JacksonH", "count_max"), ("Banff", "count_avg")]
+STEP_KW = {"retrieval": {"max_passes": 3}, "tagging": {},
+           "count_max": {"max_passes": 3}, "count_avg": {}}
+
+
+def _build_fleet(hours: float, train_steps: int):
+    videos = {n: Video(corpus(hours=hours)[n]) for n in CAMERAS}
+    stores = {n: lm.build_landmarks(v, 30, YOLO_V3)
+              for n, v in videos.items()}
+    banks = {n: FrameBank(v) for n, v in videos.items()}
+
+    def make(cam, kind):
+        env = make_env(videos[cam], Query(kind, QUERY_CLASS[cam]),
+                       stores[cam], bank=banks[cam],
+                       train_steps=train_steps)
+        ex = make_executor(env, full_family=False)
+        if kind == "tagging":
+            ex.levels = (30, 10, 1)
+        return ex
+
+    return make
+
+
+def run(hours: float, train_steps: int) -> dict:
+    make = _build_fleet(hours, train_steps)
+
+    rt_seq = OperatorRuntime()
+    prev = set_runtime(rt_seq)
+    try:
+        # env/executor construction outside the timer (the fleet branch
+        # builds its executors in sched.add, before its timer too)
+        seq_execs = [make(cam, kind) for cam, kind in WORKLOAD]
+        t0 = time.perf_counter()
+        seq_done = []
+        for ex, (cam, kind) in zip(seq_execs, WORKLOAD):
+            seq_done.append(ex.run(**STEP_KW[kind]).done_t)
+        seq_wall = time.perf_counter() - t0
+    finally:
+        set_runtime(prev)
+
+    rt_fleet = OperatorRuntime()
+    prev = set_runtime(rt_fleet)
+    try:
+        sched = FleetScheduler(contended=False)
+        for i, (cam, kind) in enumerate(WORKLOAD):
+            sched.add(f"q{i}-{cam}-{kind}", cam, make(cam, kind),
+                      **STEP_KW[kind])
+        t0 = time.perf_counter()
+        res = sched.run()
+        fleet_wall = time.perf_counter() - t0
+    finally:
+        set_runtime(prev)
+
+    fleet_done = [res[f"q{i}-{cam}-{kind}"].done_t
+                  for i, (cam, kind) in enumerate(WORKLOAD)]
+    assert fleet_done == seq_done, \
+        "uncontended fleet must match sequential simulated completion"
+
+    def mode(rt, wall):
+        return {
+            "wall_s": round(wall, 2),
+            "dispatches": rt.calls,
+            "frames_scored": rt.frames_scored,
+            "frames_per_dispatch": round(
+                rt.frames_scored / max(rt.calls, 1), 1),
+            "compiled_fns": rt.n_compiled + len(rt._apply_group),
+        }
+
+    return {
+        "queries": len(WORKLOAD),
+        "cameras": len(CAMERAS),
+        "sequential": mode(rt_seq, seq_wall),
+        "fleet": mode(rt_fleet, fleet_wall),
+        "dispatch_reduction": round(
+            rt_seq.calls / max(rt_fleet.calls, 1), 2),
+        "score_rounds": sched.stats["score_rounds"],
+    }
+
+
+def main(profile_name: str = "standard"):
+    from benchmarks.common import print_table
+    hours = 0.25 if profile_name == "quick" else 0.5
+    train_steps = 30 if profile_name == "quick" else 50
+    out = run(hours, train_steps)
+    rows = [dict(mode=m, **out[m]) for m in ("sequential", "fleet")]
+    print_table(
+        f"Fleet: {out['queries']} queries / {out['cameras']} cameras, "
+        f"sequential vs interleaved", rows)
+    print(f"[bench] dispatch reduction: {out['dispatch_reduction']}x "
+          f"({out['sequential']['dispatches']} -> "
+          f"{out['fleet']['dispatches']} calls)")
+    payload = {
+        "benchmark": "fleet",
+        "hours": hours,
+        "train_steps": train_steps,
+        **out,
+    }
+    path = ROOT / "BENCH_fleet.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[bench] wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main("quick")

@@ -14,9 +14,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_runtime, fig6_operators, fig9_queries,
-                        fig10_counting, fig11_traffic, fig12_ablation,
-                        fig13_landmarks, roofline)
+from benchmarks import (bench_fleet, bench_runtime, fig6_operators,
+                        fig9_queries, fig10_counting, fig11_traffic,
+                        fig12_ablation, fig13_landmarks, roofline)
 
 FIGURES = {
     "fig6": fig6_operators.main,
@@ -27,6 +27,7 @@ FIGURES = {
     "fig13": fig13_landmarks.main,
     "roofline": roofline.main,
     "operator_runtime": bench_runtime.main,
+    "fleet": bench_fleet.main,
 }
 
 

@@ -9,10 +9,16 @@
     PYTHONPATH=src python examples/zc2_query.py --video Banff \
         --kind count_max
 
+    # many concurrent queries over many cameras (FleetService):
+    PYTHONPATH=src python examples/zc2_query.py --fleet 8 --hours 0.25
+
 This is the end-to-end driver for the paper's system: camera capture ->
 landmarks -> cloud query planning -> multipass execution with online
 operator upgrade -> online results, against the same discrete-event
-camera/network cost models as the benchmarks."""
+camera/network cost models as the benchmarks. ``--fleet N`` instead
+submits N mixed queries over 3 cameras to one FleetService: cross-query
+batched scoring, shared-uplink contention, streaming per-query
+progress."""
 import argparse
 import sys
 
@@ -42,6 +48,46 @@ def describe(name, env, prog):
           f"op switches: {len(prog.op_switches)}")
 
 
+def run_fleet(n_queries: int, hours: float, uplink_mbps: float,
+              detector: str, full_family: bool) -> None:
+    """N mixed queries over 3 cameras through one FleetService."""
+    from repro.core.runtime import get_runtime
+    from repro.serving.fleet import FleetService
+
+    cams = ["JacksonH", "Banff", "Miami"]
+    kinds = ["retrieval", "tagging", "count_max", "count_avg"]
+    net = NetworkModel(uplink_bytes_per_s=uplink_mbps * 125_000)
+    svc = FleetService(contended=True, full_family=full_family,
+                       train_steps=50)
+    print(f"fleet: {n_queries} queries over {len(cams)} cameras "
+          f"(shared uplink, cross-query batching)")
+    for name in cams:
+        video = Video(corpus(hours=hours)[name])
+        svc.register_camera(name, video,
+                            lm.build_landmarks(video, 30,
+                                               DETECTORS[detector]))
+    step_kw = {"retrieval": {"max_passes": 3}, "tagging": {},
+               "count_max": {"max_passes": 3}, "count_avg": {}}
+    for i in range(n_queries):
+        cam, kind = cams[i % len(cams)], kinds[i % len(kinds)]
+        svc.submit(cam, Query(kind, QUERY_CLASS[cam]), net=net,
+                   **step_kw[kind])
+
+    def stream(qid, t, v):
+        print(f"   [{t:9.1f}s] {qid:<28} -> {v:6.1%}")
+
+    rt = get_runtime()
+    calls0 = rt.calls
+    results = svc.run(on_progress=stream)
+    print(f"\n-- fleet summary ({len(results)} queries, "
+          f"{rt.calls - calls0} operator dispatches, "
+          f"{svc.scheduler.stats['score_rounds']} batched score rounds) --")
+    for qid, prog in results.items():
+        print(f"   {qid:<28} done {prog.done_t:9.1f} s   "
+              f"{prog.bytes_up / 1e6:6.1f} MB   "
+              f"{len(prog.op_switches)} op switches")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--video", default="Banff", choices=sorted(QUERY_CLASS))
@@ -58,7 +104,15 @@ def main():
     ap.add_argument("--full-family", action="store_true",
                     help="the paper's ~40-operator family (slower host)")
     ap.add_argument("--baselines", action="store_true")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="run N concurrent mixed queries over 3 cameras "
+                         "through the FleetService instead of one query")
     args = ap.parse_args()
+
+    if args.fleet:
+        run_fleet(args.fleet, args.hours, args.uplink_mbps, args.detector,
+                  args.full_family)
+        return
 
     cls = QUERY_CLASS[args.video]
     print(f"scene={args.video} class={cls} kind={args.kind} "

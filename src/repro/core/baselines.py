@@ -21,7 +21,10 @@ from typing import List
 import numpy as np
 
 from repro.core import oracle
+from repro.core import upgrade as up
+from repro.core.filtering import TaggingExecutor
 from repro.core.hardware import YOLO_TINY
+from repro.core.operators import calibrate_thresholds
 from repro.core.query import Progress, QueryEnv
 from repro.core.session import QuerySession
 
@@ -185,16 +188,8 @@ def optop_retrieval(env: QueryEnv, *, full_family: bool = True) -> Progress:
 def optop_tagging(env: QueryEnv, *, full_family: bool = True,
                   levels=(30, 10, 5, 2, 1)) -> Progress:
     """One filter, multipass refinement structure but no upgrades."""
-    from repro.core.filtering import TaggingExecutor
-
-    class _Fixed(TaggingExecutor):
-        def __init__(self, env, **kw):
-            super().__init__(env, **kw)
-            self._fixed = None
-
-    ex = TaggingExecutor(env, full_family=full_family)
+    ex = TaggingExecutor(env, full_family=full_family, levels=levels)
     # monkey-free approach: temporarily pin upgrade.best_filter to first call
-    import repro.core.upgrade as up
     orig = up.best_filter
     state = {}
 
@@ -254,7 +249,6 @@ def preindex_tagging(env: QueryEnv, levels=(30, 10, 5, 2, 1),
         lm_scores = oracle.score_vec(env.video, lm_idx, env.query.cls,
                                      YOLO_TINY)
         lm_labels = np.array([l.present(env.query.cls) for l in lms])
-        from repro.core.operators import calibrate_thresholds
         lo, hi = calibrate_thresholds(lm_scores, lm_labels, err)
     else:
         lo, hi = 0.2, 0.8

@@ -20,6 +20,7 @@ import numpy as np
 from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.session import QuerySession
+from repro.core.stepper import ScoreDemand, UploadTick, drive
 
 RECENT_WINDOW = 24
 QUALITY_TRIGGER = 0.35        # Manhattan-distance urgency threshold
@@ -31,13 +32,18 @@ class MaxCountExecutor:
         self.session = QuerySession(env, full_family=full_family,
                                     boot_salt=9)
 
-    def _counts(self, trained, idxs: np.ndarray) -> np.ndarray:
-        _, cnt = self.session.score(trained, idxs)
-        return cnt
-
     def run(self, max_passes: int = 8) -> Progress:
+        """Drive ``steps`` standalone: uncontended uplink, scoring
+        through the session's OperatorRuntime fast path."""
+        return drive(self.steps(max_passes), self.session)
+
+    def steps(self, max_passes: int = 8,
+              prog: Optional[Progress] = None):
+        """The executor as a stepper (see ``core/stepper``): one
+        ``ScoreDemand`` (count head) per pass, one ``UploadTick`` per
+        candidate-max upload."""
         env = self.env
-        prog = Progress()
+        prog = prog if prog is not None else Progress()
         frames = env.frames
         n = len(frames)
         gt_max = int(env.gt_count.max()) if n else 0
@@ -46,7 +52,7 @@ class MaxCountExecutor:
 
         # shared bootstrap + initial ranker (count head, §6.3); the op
         # arrives after train + ship, nothing uploads meanwhile
-        ses = self.session.bootstrap(prog)
+        ses = yield from self.session.bootstrap_steps(prog)
         profiled = ses.profiled
         cur, trained, t = ses.init_ranker(prog)
 
@@ -70,7 +76,7 @@ class MaxCountExecutor:
             if len(unsent) == 0:
                 break
             order = unsent[rng.permutation(len(unsent))]
-            counts = self._counts(trained, order)
+            _, counts = yield ScoreDemand(trained, order)
             dt_cam = 1.0 / max(cur.fps, 1e-9)
             ci = 0
             cam_score = {}
@@ -100,7 +106,8 @@ class MaxCountExecutor:
                     t_net = max(t_net, t_cam)
                     continue
                 c, idx = entry
-                t_net = max(t_net, t_net) + 1.0 / fps_net
+                t_net += yield UploadTick(1.0 / fps_net, env.net.frame_bytes,
+                                          at=t_net)
                 prog.bytes_up += env.net.frame_bytes
                 uploaded.add(idx)
                 _, cloud_cnt = env.cloud_verify(idx)
@@ -142,8 +149,14 @@ class SampleCountExecutor:
         self.sustain = sustain
 
     def run(self, max_uploads: Optional[int] = None) -> Progress:
+        """Drive ``steps`` standalone (no operator: no ScoreDemands)."""
+        return drive(self.steps(max_uploads))
+
+    def steps(self, max_uploads: Optional[int] = None,
+              prog: Optional[Progress] = None):
+        """The executor as a stepper: pure ``UploadTick`` traffic."""
         env = self.env
-        prog = Progress()
+        prog = prog if prog is not None else Progress()
         frames = env.frames
         gt = float(np.mean(env.gt_count)) if self.stat == "mean" \
             else float(np.median(env.gt_count))
@@ -153,7 +166,8 @@ class SampleCountExecutor:
         # landmarks are the initial samples (already labeled by the
         # capture-time detector; the cloud re-validates on its detector)
         lms = env.store.in_range(frames[0], frames[-1] + 1)
-        t = env.net.upload_time(n_thumbs=len(lms))
+        t = yield UploadTick(env.net.upload_time(n_thumbs=len(lms)),
+                             len(lms) * env.net.thumbnail_bytes, at=0.0)
         prog.bytes_up += len(lms) * env.net.thumbnail_bytes
         samples = [l.count(env.query.cls) for l in lms]
 
@@ -180,7 +194,7 @@ class SampleCountExecutor:
             else:
                 ok_streak = 0
             idx = int(frames[order[k % len(frames)]])
-            t += 1.0 / fps_net
+            t += yield UploadTick(1.0 / fps_net, env.net.frame_bytes, at=t)
             prog.bytes_up += env.net.frame_bytes
             _, cnt = env.cloud_verify(idx)
             samples.append(cnt)

@@ -23,13 +23,14 @@ authoritatively by the cloud.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Set
+from typing import Deque, Optional, Set
 
 import numpy as np
 
 from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.session import QuerySession
+from repro.core.stepper import ScoreDemand, UploadTick, drive
 
 LEVELS = (30, 10, 5, 2, 1)
 
@@ -47,13 +48,18 @@ class TaggingExecutor:
         self.session = QuerySession(env, full_family=full_family,
                                     use_longterm=use_longterm, boot_salt=8)
 
-    def _scores(self, trained, idxs: np.ndarray) -> np.ndarray:
-        probs, _ = self.session.score(trained, idxs)
-        return probs
-
     def run(self) -> Progress:
+        """Drive ``steps`` standalone: uncontended uplink, scoring
+        through the session's OperatorRuntime fast path."""
+        return drive(self.steps(), self.session)
+
+    def steps(self, prog: Optional[Progress] = None):
+        """The executor as a stepper (see ``core/stepper``): one
+        ``ScoreDemand`` per refinement pass, one ``UploadTick`` per
+        unresolved-frame upload (camera tag bytes are charged but are
+        too small to contend for the uplink)."""
         env = self.env
-        prog = Progress()
+        prog = prog if prog is not None else Progress()
         frames = env.frames
         n = len(frames)
         rng = np.random.default_rng(env.video.spec.seed * 7 + 1)
@@ -62,7 +68,7 @@ class TaggingExecutor:
 
         # shared bootstrap + initial filter (§6.2): ``t`` lands past the
         # initial filter's train + ship time
-        ses = self.session.bootstrap(prog)
+        ses = yield from self.session.bootstrap_steps(prog)
         profiled = ses.profiled
         cur, trained, cur_rate = ses.init_filter(prog)
         t = ses.t
@@ -72,9 +78,11 @@ class TaggingExecutor:
         self.tags = tags
         t_cam = t_net = t
 
-        def upload(i: int, start: float) -> float:
+        def upload(i: int, start: float):
+            """Sub-stepper: ``yield from``."""
             nonlocal t_net
-            t_net = start + dt_net
+            t_net = start + (yield UploadTick(dt_net, env.net.frame_bytes,
+                                              at=start))
             prog.bytes_up += env.net.frame_bytes
             pos, cnt = env.cloud_verify(int(frames[i]))
             tags[i] = 4 if pos else 3
@@ -98,7 +106,8 @@ class TaggingExecutor:
             untagged = np.nonzero(tags == 0)[0]
             sc = np.full(n, np.nan)
             if len(untagged):
-                sc[untagged] = self._scores(trained, frames[untagged])
+                probs, _ = yield ScoreDemand(trained, frames[untagged])
+                sc[untagged] = probs
 
             def attempt(i: int, attempted: Set[int]) -> bool:
                 """Camera attempts frame i; True iff resolved on camera."""
@@ -132,14 +141,14 @@ class TaggingExecutor:
                 while queue and t_net < t_cam:
                     j = queue.popleft()
                     if tags[j] == 0:
-                        upload(j, max(t_net, 0.0))
+                        yield from upload(j, max(t_net, 0.0))
 
             # ---- stage 2: work stealing (two lanes until queue drains) ----
             while queue:
                 if t_net <= t_cam:
                     j = queue.popleft()
                     if tags[j] == 0:
-                        upload(j, t_net)
+                        yield from upload(j, t_net)
                     continue
                 # camera steals from the tail
                 i = queue[-1]
@@ -156,7 +165,7 @@ class TaggingExecutor:
                 elif not members:
                     # camera cannot help this group: let the upload happen
                     queue.remove(i)
-                    upload(i, max(t_net, t_cam))
+                    yield from upload(i, max(t_net, t_cam))
             t_done = max(t_cam, t_net)
             prog.record(t_done, (li_ + 1) / len(self.levels))
         prog.done_t = max(t_cam, t_net)

@@ -1,0 +1,240 @@
+"""FleetScheduler — N concurrent queries over M zero-streaming cameras.
+
+The paper's setting is a cloud serving *fleets* of cameras, but each
+executor is a single-query discrete-event loop. The stepper protocol
+(``core/stepper``) makes those loops resumable; this module interleaves
+many of them:
+
+  * **Cross-query batched scoring.** Whenever several queries are
+    simultaneously blocked on a ``ScoreDemand``, the scheduler hands the
+    whole set to ``OperatorRuntime.score_demands``, which fuses demands
+    sharing an arch signature into single dispatches against the shared
+    jit cache — fewer, larger, bucket-stable batches (the fleet's
+    dispatch count drops roughly by the group factor versus running the
+    queries sequentially; see ``benchmarks/bench_fleet.py``).
+
+  * **Shared-uplink contention.** Each ``UploadTick`` is answered with
+    ``seconds * factor`` where ``factor`` is the number of queries
+    active on that camera at the tick's *simulated* start time (fair
+    sharing over simulated-time overlap, independent of host scheduling
+    order) times an optional cloud-ingress stretch
+    ``max(1, demand / ingress)`` — a fluid approximation. With
+    ``contended=False`` (or one query per camera and no ingress cap)
+    the factor is 1.0 and every query's clock — and therefore its
+    ``Progress`` — is bit-identical to its standalone ``run()``.
+
+  * **Progress streaming.** Each query's inexact ``Progress`` refines
+    online; ``on_progress(qid, t, value)`` fires on every refinement via
+    ``Progress.subscribe``.
+
+Each query keeps its own env/trainer/RNG streams; only scoring dispatch
+and the uplink are shared. Executors join the fleet by exposing
+``steps(prog=..., **kw)`` — any stepper works, including ones with no
+operator at all (``SampleCountExecutor`` yields only UploadTicks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.counting import MaxCountExecutor, SampleCountExecutor
+from repro.core.filtering import TaggingExecutor
+from repro.core.query import Progress, QueryEnv
+from repro.core.ranking import RetrievalExecutor
+from repro.core.runtime import OperatorRuntime, get_runtime
+from repro.core.stepper import ScoreDemand, UploadTick
+
+
+def make_executor(env: QueryEnv, *, full_family: bool = False, **kw):
+    """The executor for ``env.query.kind`` (the fleet's entry point for
+    mixed workloads; kind-specific kwargs pass through)."""
+    kind = env.query.kind
+    if kind == "retrieval":
+        return RetrievalExecutor(env, full_family=full_family, **kw)
+    if kind == "tagging":
+        return TaggingExecutor(env, full_family=full_family, **kw)
+    if kind == "count_max":
+        return MaxCountExecutor(env, full_family=full_family, **kw)
+    if kind in ("count_avg", "count_mean"):
+        return SampleCountExecutor(env, stat="mean", **kw)
+    if kind == "count_median":
+        return SampleCountExecutor(env, stat="median", **kw)
+    raise ValueError(f"unknown query kind: {kind!r}")
+
+
+@dataclass
+class _Task:
+    qid: str
+    camera: str
+    executor: object
+    env: QueryEnv
+    prog: Progress
+    order: int = 0                # submission index (deterministic ties)
+    gen: object = None            # the stepper
+    tick: Optional[UploadTick] = None      # pending, not yet answered
+    demand: Optional[ScoreDemand] = None   # pending, not yet answered
+    result: Optional[Progress] = None
+    ticks: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return self.result is not None
+
+
+class FleetScheduler:
+    """Interleave many query steppers; batch their scoring; share the
+    uplink. ``run()`` returns ``{qid: Progress}``.
+
+    ``contended``     model shared per-camera uplink + cloud ingress;
+                      ``False`` reproduces standalone clocks exactly.
+    ``cloud_ingress_bytes_per_s``
+                      aggregate cloud ingress cap (None = unbounded).
+    ``group_max``     max demands fused into one runtime dispatch.
+    ``on_progress``   ``fn(qid, t, value)`` streamed per refinement.
+    ``runtime``       OperatorRuntime override (default: process-global,
+                      so the whole fleet shares one jit cache).
+    """
+
+    def __init__(self, *, runtime: Optional[OperatorRuntime] = None,
+                 contended: bool = True,
+                 cloud_ingress_bytes_per_s: Optional[float] = None,
+                 group_max: int = 8,
+                 on_progress: Optional[Callable[[str, float, float],
+                                               None]] = None):
+        self._runtime = runtime
+        self.contended = contended
+        self.cloud_ingress = cloud_ingress_bytes_per_s
+        self.group_max = group_max
+        self.on_progress = on_progress
+        self.tasks: List[_Task] = []
+        self.stats: Dict[str, float] = {}
+
+    @property
+    def runtime(self) -> OperatorRuntime:
+        return self._runtime if self._runtime is not None else get_runtime()
+
+    # -- fleet assembly -------------------------------------------------------
+
+    def add(self, qid: str, camera: str, executor,
+            prog: Optional[Progress] = None, **step_kwargs) -> str:
+        """Enroll a query: ``executor`` must expose ``steps(prog=...)``;
+        extra kwargs (``max_passes`` etc.) pass through to it. A caller
+        holding a ``prog`` (e.g. FleetService handing it out at submit
+        time) may pass it in; otherwise one is created."""
+        if any(t.qid == qid for t in self.tasks):
+            raise ValueError(f"duplicate qid: {qid!r}")
+        prog = prog if prog is not None else Progress()
+        if self.on_progress is not None:
+            prog.subscribe(
+                lambda t, v, qid=qid: self.on_progress(qid, t, v))
+        task = _Task(qid, camera, executor, executor.env, prog,
+                     order=len(self.tasks))
+        task.gen = executor.steps(prog=prog, **step_kwargs)
+        self.tasks.append(task)
+        return qid
+
+    # -- contention model -----------------------------------------------------
+
+    def _active_at(self, other: _Task, at: float) -> bool:
+        """Is ``other`` still uploading at simulated time ``at``?  Every
+        query starts at simulated time 0; a finished one stops at its
+        ``done_t``; an unfinished one is treated as active.  That last
+        clause is the model's conservative edge: while a peer is parked
+        at a score barrier, ticks past its *eventual* completion still
+        count it as a sharer (its end time is unknowable without
+        serving the score round, and serving rounds early would shrink
+        cross-query batches).  The estimate is a deterministic function
+        of global state, so results stay independent of submission
+        order; it only errs toward more contention."""
+        if not other.finished:
+            return True
+        end = other.result.done_t
+        return end is not None and end > at
+
+    def _uplink_factor(self, task: _Task, at: float) -> float:
+        """Fluid contention for a transfer starting at simulated time
+        ``at``: the camera's uplink is shared fairly by its queries
+        active at ``at`` (simulated-time overlap, not host scheduling
+        order), and the cloud ingress (if capped) stretches every
+        transfer by the oversubscription ratio."""
+        if not self.contended:
+            return 1.0
+        sharers = sum(1 for t in self.tasks
+                      if t.camera == task.camera and
+                      (t is task or self._active_at(t, at)))
+        factor = float(max(sharers, 1))
+        if self.cloud_ingress:
+            # each active camera demands its uplink rate; if its queries
+            # carry different NetworkModels, take the fastest (one
+            # physical link per camera; max is order-independent)
+            per_cam: Dict[str, float] = {}
+            for t in self.tasks:
+                if t is task or self._active_at(t, at):
+                    per_cam[t.camera] = max(
+                        per_cam.get(t.camera, 0.0),
+                        t.env.net.uplink_bytes_per_s)
+            factor *= max(1.0, sum(per_cam.values()) / self.cloud_ingress)
+        return factor
+
+    # -- scheduling loop ------------------------------------------------------
+
+    def _step(self, task: _Task, resp) -> None:
+        """Resume one stepper by one work item; park the item on the
+        task (``tick``/``demand``) or record its final Progress."""
+        task.tick = task.demand = None
+        try:
+            item = task.gen.send(resp)
+        except StopIteration as e:
+            task.result = e.value
+            return
+        if isinstance(item, UploadTick):
+            task.tick = item
+        elif isinstance(item, ScoreDemand):
+            task.demand = item
+        else:
+            raise TypeError(f"unknown work item from {task.qid}: {item!r}")
+
+    def run(self) -> Dict[str, Progress]:
+        """Drive every query to completion: UploadTicks are answered one
+        at a time in global *simulated-time* order (so the contention
+        factor sees the same overlaps regardless of submission order),
+        and whenever every live query is blocked on a ScoreDemand the
+        whole set goes to the runtime as one batched round."""
+        if not self.tasks:
+            return {}
+        rt = self.runtime
+        calls0, frames0 = rt.calls, rt.frames_scored
+        rounds = 0
+        for task in self.tasks:
+            self._step(task, None)
+        while True:
+            # earliest pending transfer across the fleet first
+            ticking = [t for t in self.tasks if t.tick is not None]
+            if ticking:
+                task = min(ticking, key=lambda t: (t.tick.at, t.order))
+                item = task.tick
+                task.ticks += 1
+                self._step(task, item.seconds *
+                           self._uplink_factor(task, item.at))
+                continue
+            # no transfers in flight: every live query sits at a score
+            # barrier — one cross-query batched dispatch round
+            blocked = [t for t in self.tasks if t.demand is not None]
+            if not blocked:
+                break
+            rounds += 1
+            outs = rt.score_demands(
+                [(t.demand.trained, t.env.bank, t.demand.idxs)
+                 for t in blocked],
+                group_max=self.group_max)
+            for task, out in zip(blocked, outs):
+                self._step(task, out)
+        self.stats = {
+            "queries": len(self.tasks),
+            "cameras": len({t.camera for t in self.tasks}),
+            "score_rounds": rounds,
+            "dispatches": rt.calls - calls0,
+            "frames_scored": rt.frames_scored - frames0,
+            "upload_ticks": sum(t.ticks for t in self.tasks),
+        }
+        return {t.qid: t.result for t in self.tasks}

@@ -31,15 +31,30 @@ class Query:
 
 @dataclass
 class Progress:
-    """Time series of user-visible query progress + network accounting."""
+    """Time series of user-visible query progress + network accounting.
+
+    ``subscribe`` registers streaming listeners: every refinement of the
+    (inexact) answer is pushed to them as it is recorded, which is how
+    the ``FleetScheduler``/``FleetService`` stream per-query progress to
+    users while many queries are in flight.  Listeners are bookkeeping,
+    not state: they are excluded from equality, so a streamed Progress
+    still compares bit-identical to an unstreamed one.
+    """
     points: List[Tuple[float, float]] = field(default_factory=list)
     bytes_up: float = 0.0
     op_switches: List[Tuple[float, str]] = field(default_factory=list)
     done_t: Optional[float] = None
+    _listeners: List = field(default_factory=list, repr=False, compare=False)
+
+    def subscribe(self, fn) -> None:
+        """``fn(t, value)`` is called on every recorded refinement."""
+        self._listeners.append(fn)
 
     def record(self, t: float, value: float) -> None:
         if not self.points or value != self.points[-1][1]:
             self.points.append((t, value))
+            for fn in self._listeners:
+                fn(t, value)
 
     def time_to(self, frac: float) -> Optional[float]:
         for t, v in self.points:

@@ -26,7 +26,8 @@ from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.queue import AsyncUploadQueue
 from repro.core.session import QuerySession
-from repro.core.training import TrainedOp
+from repro.core.skew import rank_spans
+from repro.core.stepper import ScoreDemand, UploadTick, drive
 
 RECENT_WINDOW = 30
 
@@ -49,15 +50,18 @@ class RetrievalExecutor:
             use_longterm=use_longterm, boot_salt=7,
             density_grain=self.grain)
 
-    def _score_pass(self, trained: TrainedOp, idxs: np.ndarray) -> np.ndarray:
-        """Real operator inference for all frames of a pass (batched
-        through the OperatorRuntime jit cache)."""
-        probs, _ = self.session.score(trained, idxs)
-        return probs
-
     def run(self, max_passes: int = 12) -> Progress:
+        """Drive ``steps`` standalone: uncontended uplink, scoring
+        through the session's OperatorRuntime fast path."""
+        return drive(self.steps(max_passes), self.session)
+
+    def steps(self, max_passes: int = 12,
+              prog: Optional[Progress] = None):
+        """The executor as a stepper (see ``core/stepper``): the
+        historical event loop, yielding ``ScoreDemand`` per ranking pass
+        and ``UploadTick`` per uplink transfer."""
         env = self.env
-        prog = Progress()
+        prog = prog if prog is not None else Progress()
         frames = env.frames
         n = len(frames)
         n_pos = max(env.n_positives, 1)
@@ -67,7 +71,7 @@ class RetrievalExecutor:
         # 1.-2. shared bootstrap + initial op (§6.1 rule 1); the camera
         # keeps uploading while the initial op trains/ships, so ``t``
         # stays at the bootstrap clock and ``arrive`` is the op's ETA.
-        ses = self.session.bootstrap(prog)
+        ses = yield from self.session.bootstrap_steps(prog)
         t = ses.t
         density = ses.density
         profiled = ses.profiled
@@ -87,7 +91,6 @@ class RetrievalExecutor:
                 prog.record(t_up, found / n_pos)
 
         # 3. bootstrap uploads: top-density spans, unranked, until op arrives
-        from repro.core.skew import rank_spans
         spans = rank_spans(density, self.grain, env.video.spec.num_frames)
         boot_order = [i for (a, b) in spans for i in range(a, b)
                       if frames[0] <= i <= frames[-1]]
@@ -97,7 +100,7 @@ class RetrievalExecutor:
             bi += 1
             if q.uploaded(idx):
                 continue
-            t += dt_net
+            t += yield UploadTick(dt_net, env.net.frame_bytes, at=t)
             verify_upload(idx, t)
 
         # 4. multipass ranking
@@ -118,9 +121,9 @@ class RetrievalExecutor:
             sc = np.array([q.current_score(int(i)) for i in unsent])
             return unsent[np.argsort(-sc, kind="stable")]
 
-        def drain_network(until: float) -> bool:
+        def drain_network(until: float):
             """Advance the network lane up to time ``until``; returns True
-            when the query completed."""
+            when the query completed. (A sub-stepper: ``yield from``.)"""
             nonlocal t_net, initial_ratio, pending_op, pending_arrival
             while t_net < until:
                 if found >= n_pos or q.n_uploaded >= n:
@@ -132,7 +135,8 @@ class RetrievalExecutor:
                         return False
                     t_net = max(t_net, t_next)
                     continue
-                t_net += dt_net
+                t_net += yield UploadTick(dt_net, env.net.frame_bytes,
+                                          at=t_net)
                 verify_upload(idx, t_net)
                 recent.append(env.is_positive(idx))
                 # ---- cloud upgrade policy (k-rule trigger, §6.1-2) ----
@@ -155,7 +159,7 @@ class RetrievalExecutor:
             order = build_pass_order(first=pass_no == 0)
             if len(order) == 0:
                 break
-            scores = self._score_pass(trained, order)
+            scores, _ = yield ScoreDemand(trained, order)
             dt_cam = 1.0 / max(cur.fps, 1e-9)
             interrupted = False
             # camera ranks the whole pass; the network drains concurrently
@@ -165,7 +169,7 @@ class RetrievalExecutor:
                     continue
                 t_cam += dt_cam
                 q.rank(t_cam, idx, float(scores[ci]))
-                if drain_network(t_cam):
+                if (yield from drain_network(t_cam)):
                     prog.done_t = t_net
                     return prog
                 if pending_arrival is not None and t_cam >= pending_arrival:
@@ -189,7 +193,7 @@ class RetrievalExecutor:
                 if nxt is not None and nxt[0].name != cur.name:
                     cur, trained = nxt
                     arr = t_cam + env.cloud.ship_time(cur.arch.size_bytes)
-                    if drain_network(arr):
+                    if (yield from drain_network(arr)):
                         prog.done_t = t_net
                         return prog
                     t_cam = max(t_cam, arr)
@@ -211,14 +215,16 @@ class RetrievalExecutor:
                     break
                 t_net = max(t_net, t_next)
                 continue
-            t_net += dt_net
+            t_net += yield UploadTick(dt_net, env.net.frame_bytes,
+                                      at=t_net)
             verify_upload(idx, t_net)
         for idx in frames:
             if found >= n_pos:
                 break
             if q.uploaded(int(idx)):
                 continue
-            t_net += dt_net
+            t_net += yield UploadTick(dt_net, env.net.frame_bytes,
+                                      at=t_net)
             verify_upload(int(idx), t_net)
         prog.done_t = t_net
         return prog

@@ -17,13 +17,16 @@ module centralizes scoring:
     as the CPU fallback (``kernels/ops.conv_scorer_fn``).
 
 Executors reach it through ``QuerySession.score``; the cloud trainer's
-validation scoring goes through ``get_runtime().score_crops``. The
-process-global runtime means a query fleet sharing one host also
-shares one compilation cache.
+validation scoring goes through ``get_runtime().score_crops``; the
+``FleetScheduler`` hands many queries' concurrent demands to
+``score_demands``, which fuses same-arch-signature demands into single
+dispatches (fewer, larger, bucket-stable batches). The process-global
+runtime means a query fleet sharing one host also shares one
+compilation cache.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +63,9 @@ class OperatorRuntime:
         self.chunk = int(chunk)
         self.min_bucket = int(min_bucket)
         self._apply: Dict[ArchSig, Callable] = {}
+        self._apply_group: Dict[ArchSig, Callable] = {}
         self._traces: Dict[ArchSig, int] = {}
+        self._group_traces: Dict[ArchSig, int] = {}
         self.calls = 0
         self.frames_scored = 0
 
@@ -69,19 +74,22 @@ class OperatorRuntime:
     def apply_fn(self, arch) -> Callable:
         """The jit-compiled ``(params, x) -> (probs, counts)`` for an
         arch — built once per signature per runtime."""
-        sig = arch_signature(arch)
+        return self._apply_sig(arch_signature(arch))
+
+    def _apply_sig(self, sig: ArchSig) -> Callable:
         fn = self._apply.get(sig)
         if fn is None:
             fn = self._build(sig)
             self._apply[sig] = fn
         return fn
 
-    def _build(self, sig: ArchSig) -> Callable:
+    def _scorer_body(self, sig: ArchSig) -> Callable:
+        """The per-batch ``(params, x) -> (probs, counts)`` computation —
+        shared verbatim by the single-demand and grouped dispatch paths,
+        so grouping cannot change the traced math."""
         conv = kops.conv_scorer_fn(self.backend, interpret=self.interpret)
 
         def scorer(params, x):
-            # executes at trace time only: counts compilations per sig
-            self._traces[sig] = self._traces.get(sig, 0) + 1
             h = x
             for c in params["convs"]:
                 h = conv(h, c["w"], c["b"])
@@ -90,7 +98,36 @@ class OperatorRuntime:
             out = h @ params["head"]["w"] + params["head"]["b"]
             return jax.nn.sigmoid(out[:, 0]), jax.nn.softplus(out[:, 1])
 
+        return scorer
+
+    def _build(self, sig: ArchSig) -> Callable:
+        body = self._scorer_body(sig)
+
+        def scorer(params, x):
+            # executes at trace time only: counts compilations per sig
+            self._traces[sig] = self._traces.get(sig, 0) + 1
+            return body(params, x)
+
         return jax.jit(scorer)
+
+    def _group_fn(self, sig: ArchSig) -> Callable:
+        """The fused multi-demand dispatch for one arch signature: a
+        jit-compiled function over *tuples* of (params, x) whose traced
+        body is N independent copies of the single-demand scorer. One
+        call = one dispatch covering demands from several queries; jit
+        retraces per distinct shape tuple (shapes are bucketed, so the
+        tuple vocabulary stays small)."""
+        fn = self._apply_group.get(sig)
+        if fn is None:
+            body = self._scorer_body(sig)
+
+            def grouped(params_seq, x_seq):
+                self._group_traces[sig] = self._group_traces.get(sig, 0) + 1
+                return tuple(body(p, x) for p, x in zip(params_seq, x_seq))
+
+            fn = jax.jit(grouped)
+            self._apply_group[sig] = fn
+        return fn
 
     def trace_count(self, arch=None) -> int:
         if arch is None:
@@ -147,6 +184,76 @@ class OperatorRuntime:
             probs[i:i + len(sel)] = p
             counts[i:i + len(sel)] = c
         return probs, counts
+
+    # -- cross-query demand aggregation ---------------------------------------
+
+    def score_demands(self, demands, *, group_max: int = 8
+                      ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Score many queries' demands with fewer, larger dispatches.
+
+        ``demands``: list of ``(trained, bank, idxs)`` — one per query
+        (different queries have different params and FrameBanks but
+        often share an arch *signature*). Each demand is cut into the
+        same bucketed chunks the single-query ``score`` path would use;
+        chunks sharing a signature are then fused — up to ``group_max``
+        per dispatch — through ``_group_fn``, so N queries cost ~N/
+        ``group_max`` dispatches against one shared jit cache instead of
+        N. Per-chunk shapes, padding, and traced math are identical to
+        the single-query path, which is what keeps fleet scores
+        bit-identical to standalone runs (asserted in
+        ``tests/test_fleet.py``).
+
+        Returns ``[(probs, counts)]`` aligned with ``demands``.
+        """
+        results: List[Tuple[np.ndarray, np.ndarray]] = []
+        by_sig: Dict[ArchSig, List[tuple]] = {}
+        for di, (trained, bank, idxs) in enumerate(demands):
+            idxs = np.asarray(idxs, np.int64)
+            results.append((np.empty(len(idxs), np.float64),
+                            np.empty(len(idxs), np.float64)))
+            arch = trained.arch
+            sig = arch_signature(arch)
+            for i in range(0, len(idxs), self.chunk):
+                sel = idxs[i:i + self.chunk]
+                x = np.asarray(bank.crops(sel, arch.region, arch.input_size),
+                               np.float32)
+                m = x.shape[0]
+                if m == 0:
+                    continue
+                b = self._bucket(m)
+                if m < b:
+                    x = np.concatenate(
+                        [x, np.zeros((b - m,) + x.shape[1:], np.float32)])
+                by_sig.setdefault(sig, []).append(
+                    (di, i, m, trained.params, x))
+
+        def scatter(chunk, p, c):
+            di, off, m, _, _ = chunk
+            probs, counts = results[di]
+            probs[off:off + m] = np.asarray(p, np.float64)[:m]
+            counts[off:off + m] = np.asarray(c, np.float64)[:m]
+
+        for sig, chunks in by_sig.items():
+            # canonical dispatch order: shapes sorted large-first BEFORE
+            # cutting group_max windows, so permutations of the same
+            # demand multiset hit the same compiled shape tuples
+            # (scatter is index-based, so order is free to choose)
+            chunks.sort(key=lambda it: (-it[4].shape[0], it[0], it[1]))
+            for k in range(0, len(chunks), group_max):
+                part = chunks[k:k + group_max]
+                self.calls += 1
+                self.frames_scored += sum(it[2] for it in part)
+                if len(part) == 1:
+                    di, off, m, params, x = part[0]
+                    p, c = self._apply_sig(sig)(params, jnp.asarray(x))
+                    scatter(part[0], p, c)
+                    continue
+                outs = self._group_fn(sig)(
+                    tuple(it[3] for it in part),
+                    tuple(jnp.asarray(it[4]) for it in part))
+                for chunk, (p, c) in zip(part, outs):
+                    scatter(chunk, p, c)
+        return results
 
 
 # -- process-global runtime ---------------------------------------------------

@@ -24,10 +24,11 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import factory, landmarks as lm_mod, upgrade
+from repro.core import factory, flow, landmarks as lm_mod, upgrade
 from repro.core.factory import ProfiledOp
 from repro.core.query import Progress, QueryEnv
 from repro.core.runtime import OperatorRuntime, get_runtime
+from repro.core.stepper import UploadTick, drive
 from repro.core.training import TrainedOp
 
 
@@ -67,8 +68,16 @@ class QuerySession:
     # -- bootstrap (§5.2, §8.4) ----------------------------------------------
 
     def bootstrap(self, prog: Progress) -> "QuerySession":
+        """Eager ``bootstrap_steps``: uncontended uplink (baselines and
+        pre-fleet callers). Advances ``self.t`` and charges
+        ``prog.bytes_up``."""
+        return drive(self.bootstrap_steps(prog))
+
+    def bootstrap_steps(self, prog: Progress):
         """Pull landmarks, seed the training pool, derive long-term
-        knowledge, breed + profile the operator family. Advances
+        knowledge, breed + profile the operator family. A stepper
+        (yields ``UploadTick`` per uplink transfer — see
+        ``core/stepper``); executors ``yield from`` it. Advances
         ``self.t`` and charges ``prog.bytes_up``."""
         env = self.env
         frames = env.frames
@@ -76,12 +85,13 @@ class QuerySession:
 
         # 1. landmark pull (thumbnails) + bootstrap training set
         self.lms = env.store.in_range(frames[0], frames[-1] + 1)
-        self.t = env.net.upload_time(n_thumbs=len(self.lms))
+        self.t = yield UploadTick(env.net.upload_time(n_thumbs=len(self.lms)),
+                                  len(self.lms) * env.net.thumbnail_bytes,
+                                  at=0.0)
         prog.bytes_up += len(self.lms) * env.net.thumbnail_bytes
         li, ll, lc = lm_mod.training_set(env.store, env.query.cls)
         env.trainer.add_samples(li, ll, lc)
         if self.use_flow and len(self.lms):
-            from repro.core import flow
             fi, fl, fc = flow.propagate(env.video, env.store, env.query.cls)
             env.trainer.add_samples(fi, fl, fc)
 
@@ -92,7 +102,8 @@ class QuerySession:
             rng = np.random.default_rng(
                 env.video.spec.seed * 31 + self.boot_salt)
             for idx in rng.choice(frames, min(60, n), replace=False):
-                self.t += self.dt_net
+                self.t += yield UploadTick(self.dt_net, env.net.frame_bytes,
+                                           at=self.t)
                 prog.bytes_up += env.net.frame_bytes
                 pos, cnt = env.cloud_verify(int(idx))
                 env.trainer.add_samples([int(idx)], [pos], [cnt])

@@ -1,0 +1,85 @@
+"""Step-wise executor protocol (the fleet substrate).
+
+Every query executor is written as a *stepper*: a generator that runs
+the executor's historical discrete-event loop unchanged, but yields a
+work item whenever it needs something from the outside world and
+receives the answer from ``send()``:
+
+  ``ScoreDemand(trained, idxs)``  -> responds ``(probs, counts)``
+      operator inference over frame indices.  Standalone drivers answer
+      through ``QuerySession.score``; the ``FleetScheduler`` aggregates
+      demands from many concurrent queries into fewer, larger
+      ``OperatorRuntime`` dispatches (``score_demands``).
+
+  ``UploadTick(seconds, nbytes)`` -> responds ``float`` (actual seconds)
+      one uplink transfer.  ``seconds`` is the *uncontended* duration,
+      computed by the executor exactly as the pre-stepper code did (so
+      an uncontended driver echoing it back reproduces the historical
+      clock bit-for-bit).  A contended driver returns a stretched
+      duration (shared camera uplink / cloud ingress).
+
+The generator's ``return`` value is the query's ``Progress``.  Because
+the stepper bodies are the same code that used to live in ``run()``
+(same RNG streams, same event ordering), a stepper driven by ``drive``
+is bit-identical to the pre-refactor executor, and a stepper driven by
+an uncontended ``FleetScheduler`` is bit-identical to ``drive``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Generator, Optional, Tuple
+
+import numpy as np
+
+WorkItem = Any          # ScoreDemand | UploadTick
+Stepper = Generator     # Generator[WorkItem, Any, "Progress"]
+
+
+@dataclass
+class ScoreDemand:
+    """Operator inference request: score ``idxs`` with ``trained``.
+
+    Response: ``(probs, counts)`` float64 numpy arrays, one entry per
+    index — exactly what ``QuerySession.score`` returns.
+    """
+    trained: Any               # TrainedOp
+    idxs: np.ndarray
+
+
+@dataclass
+class UploadTick:
+    """One uplink transfer of ``nbytes`` whose uncontended duration is
+    ``seconds``, starting at the query's simulated time ``at``.
+    Response: the actual duration in seconds (equal to ``seconds`` when
+    the uplink is uncontended; a contended driver stretches it by the
+    number of queries sharing the link at ``at``)."""
+    seconds: float
+    nbytes: float = 0.0
+    at: float = 0.0
+
+
+def drive(gen: Stepper, session=None, *,
+          score: Optional[Callable[[ScoreDemand],
+                                   Tuple[np.ndarray, np.ndarray]]] = None):
+    """Run a stepper to completion standalone: uncontended uplink, and
+    scoring through ``session.score`` (or a custom ``score`` callback).
+    Returns the generator's return value (the ``Progress``)."""
+    if score is None and session is not None:
+        def score(d):  # noqa: E731 — default: the session fast path
+            return session.score(d.trained, d.idxs)
+    resp = None
+    while True:
+        try:
+            item = gen.send(resp)
+        except StopIteration as e:
+            return e.value
+        if isinstance(item, ScoreDemand):
+            if score is None:
+                raise RuntimeError(
+                    "stepper yielded a ScoreDemand but drive() was given "
+                    "no session/score callback")
+            resp = score(item)
+        elif isinstance(item, UploadTick):
+            resp = item.seconds
+        else:
+            raise TypeError(f"unknown work item: {item!r}")

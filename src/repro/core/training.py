@@ -16,6 +16,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import operators as ops_mod
+from repro.core import runtime as rt_mod
 from repro.core.hardware import CloudModel
 from repro.core.operators import OperatorArch
 from repro.core.video import FRAME_H, FRAME_W, Video, _resize_batch
@@ -127,9 +128,8 @@ class CloudTrainer:
             arch, params, crops, tl, tc, steps=steps, seed=self.seed)
         # validate (batched through the shared OperatorRuntime jit cache)
         if len(vi):
-            from repro.core.runtime import get_runtime
             vcrops = self.bank.crops(vi, arch.region, arch.input_size)
-            vs, vcnt = get_runtime().score_crops(params, arch, vcrops)
+            vs, vcnt = rt_mod.get_runtime().score_crops(params, arch, vcrops)
             auc = _auc(vs, vl > 0.5)
             lo, hi = ops_mod.calibrate_thresholds(vs, vl > 0.5,
                                                   self.error_budget)

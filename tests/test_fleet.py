@@ -1,0 +1,203 @@
+"""FleetScheduler: seeded fleet-vs-standalone equivalence (uncontended
+bandwidth -> every query's Progress is bit-identical to its standalone
+executor run), cross-query batched scoring (fewer OperatorRuntime
+dispatches than sequential execution, bitwise-equal results), shared-
+uplink contention, and the FleetService serving front end."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import landmarks as lm_mod
+from repro.core.fleet import FleetScheduler, make_executor
+from repro.core.hardware import YOLO_V3, NetworkModel
+from repro.core.operators import OperatorArch, init_operator
+from repro.core.query import Query, make_env
+from repro.core.runtime import OperatorRuntime, set_runtime
+from repro.core.training import FrameBank
+from repro.core.video import QUERY_CLASS, Video, corpus
+
+CAMERAS = ("JacksonH", "Banff", "Miami")
+
+# 8 mixed queries over 3 cameras (the acceptance workload at CI scale)
+SPECS = [
+    ("JacksonH", "retrieval", {"max_passes": 2}),
+    ("Banff", "retrieval", {"max_passes": 2}),
+    ("JacksonH", "count_max", {"max_passes": 2}),
+    ("Miami", "count_max", {"max_passes": 2}),
+    ("Banff", "tagging", {}),
+    ("Miami", "tagging", {}),
+    ("Banff", "count_avg", {}),
+    ("Miami", "count_median", {}),
+]
+
+
+@pytest.fixture(scope="module")
+def fleet_world():
+    videos = {n: Video(corpus(hours=0.25)[n]) for n in CAMERAS}
+    stores = {n: lm_mod.build_landmarks(v, 30, YOLO_V3)
+              for n, v in videos.items()}
+    banks = {n: FrameBank(v) for n, v in videos.items()}
+    return videos, stores, banks
+
+
+def _executor(world, cam, kind, **qkw):
+    videos, stores, banks = world
+    env = make_env(videos[cam], Query(kind, QUERY_CLASS[cam], **qkw),
+                   stores[cam], bank=banks[cam], train_steps=30)
+    ex = make_executor(env, full_family=False)
+    if kind == "tagging":
+        ex.levels = (30, 10, 1)
+    return ex
+
+
+@pytest.fixture(scope="module")
+def fleet_vs_solo(fleet_world):
+    """Run the 8-query workload standalone and through an uncontended
+    FleetScheduler against fresh runtimes; both views share fixture
+    scope so the expensive executions happen once."""
+    prev = set_runtime(OperatorRuntime(backend="jnp"))
+    try:
+        from repro.core.runtime import get_runtime
+        solo, solo_calls = [], 0
+        for cam, kind, kw in SPECS:
+            ex = _executor(fleet_world, cam, kind)
+            c0 = get_runtime().calls
+            solo.append(ex.run(**kw))
+            solo_calls += get_runtime().calls - c0
+    finally:
+        set_runtime(prev)
+
+    rt = OperatorRuntime(backend="jnp")
+    prev = set_runtime(rt)
+    try:
+        sched = FleetScheduler(contended=False)
+        for i, (cam, kind, kw) in enumerate(SPECS):
+            sched.add(f"q{i}", cam, _executor(fleet_world, cam, kind), **kw)
+        fleet = sched.run()
+    finally:
+        set_runtime(prev)
+    return solo, fleet, solo_calls, sched
+
+
+def test_fleet_matches_standalone_bitwise(fleet_vs_solo):
+    """Acceptance: with uncontended bandwidth, every query's Progress
+    under the FleetScheduler is bit-identical to its standalone run —
+    same refinement points, bytes, op switches, completion time."""
+    solo, fleet, _, sched = fleet_vs_solo
+    assert len(fleet) == len(SPECS) >= 8
+    assert sched.stats["cameras"] >= 3
+    for i, standalone in enumerate(solo):
+        interleaved = fleet[f"q{i}"]
+        assert interleaved.points == standalone.points
+        assert interleaved.bytes_up == standalone.bytes_up
+        assert interleaved.done_t == standalone.done_t
+        assert interleaved.op_switches == standalone.op_switches
+
+
+def test_fleet_batches_scoring_into_fewer_dispatches(fleet_vs_solo):
+    """Cross-query batching: interleaving must need strictly fewer
+    OperatorRuntime dispatches than sequential execution of the same
+    workload (same frames scored)."""
+    _, _, solo_calls, sched = fleet_vs_solo
+    assert sched.stats["dispatches"] < solo_calls
+    assert sched.stats["frames_scored"] > 0
+
+
+def test_score_demands_fused_dispatch_bitwise():
+    """The grouped dispatch underpinning cross-query batching: demands
+    sharing an arch signature fuse into one call whose per-demand
+    results are bitwise identical to separate ``score_crops`` calls."""
+    arch_a = OperatorArch("fl_a", 3, 16, 32, 50)
+    arch_b = OperatorArch("fl_b", 3, 16, 32, 50)    # same signature
+    arch_c = OperatorArch("fl_c", 2, 8, 16, 25)     # different signature
+    rng = np.random.default_rng(11)
+
+    class _Trained:
+        def __init__(self, arch, params):
+            self.arch, self.params = arch, params
+
+    class _Bank:
+        def __init__(self, crops):
+            self._c = crops
+
+        def crops(self, idxs, region, size):
+            return self._c[np.asarray(idxs)]
+
+    pa = init_operator(arch_a, jax.random.PRNGKey(1))
+    pb = init_operator(arch_b, jax.random.PRNGKey(2))
+    pc = init_operator(arch_c, jax.random.PRNGKey(3))
+    c50 = rng.uniform(size=(260, 50, 50, 3)).astype(np.float32)
+    c25 = rng.uniform(size=(130, 25, 25, 3)).astype(np.float32)
+
+    single = OperatorRuntime(backend="jnp")
+    want = [single.score_crops(pa, arch_a, c50[:200]),
+            single.score_crops(pb, arch_b, c50[60:]),
+            single.score_crops(pc, arch_c, c25)]
+    assert single.calls == 3
+
+    fused = OperatorRuntime(backend="jnp")
+    got = fused.score_demands(
+        [(_Trained(arch_a, pa), _Bank(c50), np.arange(200)),
+         (_Trained(arch_b, pb), _Bank(c50), np.arange(60, 260)),
+         (_Trained(arch_c, pc), _Bank(c25), np.arange(130))])
+    assert fused.calls == 2                 # a+b fused, c alone
+    for (wp, wc), (gp, gc) in zip(want, got):
+        assert np.array_equal(wp, gp)
+        assert np.array_equal(wc, gc)
+    # one fused trace for the shared signature, reused on a repeat round
+    fused.score_demands(
+        [(_Trained(arch_a, pa), _Bank(c50), np.arange(200)),
+         (_Trained(arch_b, pb), _Bank(c50), np.arange(60, 260))])
+    assert fused._group_traces == {(3, 16, 32, 50): 1}
+
+
+def test_fleet_contention_slows_shared_camera(fleet_world):
+    """Two queries hammering one camera's uplink each finish later than
+    standalone; the contention factor never changes *what* is uploaded,
+    only when (SampleCount: identical refinement values, scaled clock)."""
+    def run_pair(contended, reverse=False):
+        sched = FleetScheduler(contended=contended)
+        kinds = [(0, "count_avg"), (1, "count_median")]
+        for i, kind in (reversed(kinds) if reverse else kinds):
+            sched.add(f"c{i}", "Banff",
+                      _executor(fleet_world, "Banff", kind))
+        return sched.run()
+
+    alone = [_executor(fleet_world, "Banff", k).run()
+             for k in ("count_avg", "count_median")]
+    shared = run_pair(contended=True)
+    free = run_pair(contended=False)
+    swapped = run_pair(contended=True, reverse=True)
+    for i in range(2):
+        assert free[f"c{i}"].done_t == alone[i].done_t
+        assert shared[f"c{i}"].done_t > alone[i].done_t
+        assert [v for _, v in shared[f"c{i}"].points] == \
+            [v for _, v in alone[i].points]
+        # ticks are served in simulated-time order, so contention does
+        # not depend on submission order
+        assert swapped[f"c{i}"].done_t == shared[f"c{i}"].done_t
+
+
+def test_fleet_service_streams_progress(fleet_world):
+    """Serving front end: register cameras, submit, stream per-query
+    refinements via Progress.subscribe, fetch results by qid."""
+    from repro.serving.fleet import FleetService
+
+    videos, stores, _ = fleet_world
+    svc = FleetService(contended=True, train_steps=30)
+    for name in ("Banff", "Miami"):
+        svc.register_camera(name, videos[name], stores[name])
+    q0 = svc.submit("Banff", Query("count_avg", QUERY_CLASS["Banff"]))
+    q1 = svc.submit("Miami", Query("count_median", QUERY_CLASS["Miami"]),
+                    net=NetworkModel(uplink_bytes_per_s=5e5))
+    streamed = {}
+    results = svc.run(
+        on_progress=lambda qid, t, v: streamed.setdefault(qid, []).append(
+            (t, v)))
+    assert set(results) == {q0, q1}
+    for qid in (q0, q1):
+        prog = svc.result(qid)
+        assert prog is svc.progress(qid)
+        assert prog.done_t is not None
+        # everything recorded was streamed, in order
+        assert streamed[qid] == prog.points

@@ -256,6 +256,80 @@ def test_queue_property_no_double_upload_no_timetravel(ops):
     assert sorted(popped) == sorted(rank_time)
 
 
+def _drain_step(q, t):
+    """One pop attempt at clock ``t``: (popped idx | None, new clock)."""
+    while True:
+        idx, t_next = q.pop_best(t)
+        if idx is None:
+            if t_next is None:
+                return None, t
+            t = t_next
+            continue
+        q.mark_uploaded(idx)
+        return idx, t
+
+
+@given(st.lists(st.lists(st.tuples(
+    st.floats(0, 100), st.integers(0, 25),
+    # mix a tiny score alphabet in so exact score collisions across
+    # re-ranks (saturated 0.0/1.0 operator outputs) are actually drawn
+    st.one_of(st.sampled_from([0.0, 0.5, 1.0]), st.floats(0, 1))),
+    max_size=15), min_size=1, max_size=10))
+@settings(max_examples=40)
+def test_queue_compaction_preserves_pop_order(batches):
+    """Property: a compacting queue pops the exact same sequence as the
+    lazy-invalidation-only reference, under interleaved re-ranking
+    passes and drains (the satellite fix for unbounded heap growth)."""
+    ref = AsyncUploadQueue(compact=False)
+    cq = AsyncUploadQueue(compact_min_heap=2)
+    t_ref = t_cq = 0.0
+    for ranks in batches:
+        for (t, idx, s) in ranks:
+            ref.rank(t, idx, s)
+            cq.rank(t, idx, s)
+        for _ in range(2):                 # partial drain between passes
+            got_ref, t_ref = _drain_step(ref, t_ref)
+            got_cq, t_cq = _drain_step(cq, t_cq)
+            assert got_ref == got_cq
+            assert t_ref == t_cq
+    while True:                            # full drain
+        got_ref, t_ref = _drain_step(ref, t_ref)
+        got_cq, t_cq = _drain_step(cq, t_cq)
+        assert got_ref == got_cq
+        if got_ref is None:
+            break
+
+
+def test_queue_compaction_bounds_heap_growth():
+    """Re-ranking passes over mostly-unsent frames must not accumulate
+    stale heap entries without bound (the executor's multipass
+    pattern): with compaction the heap stays O(live)."""
+    n, passes = 200, 12
+    ref = AsyncUploadQueue(compact=False)
+    cq = AsyncUploadQueue()               # default thresholds
+    t = 0.0
+    for p in range(passes):
+        for i in range(n):
+            t += 1.0
+            ref.rank(t, i, 0.01 * ((i * 7 + p) % 97))
+            cq.rank(t, i, 0.01 * ((i * 7 + p) % 97))
+        # upload a couple of frames per pass, same clock for both
+        for _ in range(2):
+            a, t = _drain_step(ref, t)
+            b, _ = _drain_step(cq, t)
+            assert a == b
+    assert cq.compactions > 0
+    assert len(ref._heap) > 4 * cq.n_live      # the growth being fixed
+    assert len(cq._heap) <= 2 * cq.n_live + 1  # compacted: O(live)
+    # and the remaining drain order is still identical
+    while True:
+        a, t = _drain_step(ref, t)
+        b, _ = _drain_step(cq, t)
+        assert a == b
+        if a is None:
+            break
+
+
 # ---------------------------------------------------------------------------
 # operator family
 # ---------------------------------------------------------------------------
