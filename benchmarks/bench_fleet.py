@@ -24,7 +24,7 @@ from repro.core import landmarks as lm
 from repro.core.fleet import FleetScheduler, make_executor
 from repro.core.hardware import YOLO_V3
 from repro.core.query import Query, make_env
-from repro.core.runtime import OperatorRuntime, set_runtime
+from repro.core.runtime import OperatorRuntime, TraceGuard, set_runtime
 from repro.core.training import FrameBank
 from repro.core.video import QUERY_CLASS, Video, corpus
 
@@ -83,7 +83,11 @@ def run(hours: float, train_steps: int) -> dict:
             sched.add(f"q{i}-{cam}-{kind}", cam, make(cam, kind),
                       **STEP_KW[kind])
         t0 = time.perf_counter()
-        res = sched.run()
+        # guard enforces one trace per (arch signature, batch shape)
+        # across the whole interleaved run — a retrace here is the
+        # recompile overhead the ROADMAP flags, so fail loudly
+        with TraceGuard(rt_fleet) as guard:
+            res = sched.run()
         fleet_wall = time.perf_counter() - t0
     finally:
         set_runtime(prev)
@@ -111,6 +115,7 @@ def run(hours: float, train_steps: int) -> dict:
         "dispatch_reduction": round(
             rt_seq.calls / max(rt_fleet.calls, 1), 2),
         "score_rounds": sched.stats["score_rounds"],
+        "traces_per_arch": guard.traces_per_arch,
     }
 
 

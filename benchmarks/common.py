@@ -11,15 +11,12 @@ from __future__ import annotations
 
 import csv
 import dataclasses
-import sys
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Dict, List, Tuple
 
 from repro.core import landmarks as lm_mod
-from repro.core.hardware import DETECTORS, RPI3, DetectorModel, YOLO_V3
+from repro.core.hardware import DETECTORS, RPI3
 from repro.core.query import Query, make_env
 from repro.core.training import FrameBank
 from repro.core.video import QUERY_CLASS, Video, corpus

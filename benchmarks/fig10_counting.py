@@ -7,8 +7,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import (Profile, SceneCache, StepTimer, realtime_x,
-                               write_csv)
+from benchmarks.common import Profile, SceneCache, StepTimer, write_csv
 from repro.core.baselines import cloud_only_count, preindex_count
 from repro.core.counting import MaxCountExecutor, SampleCountExecutor
 

@@ -14,8 +14,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import (Profile, SceneCache, StepTimer, realtime_x,
-                               write_csv)
+from benchmarks.common import Profile, SceneCache, StepTimer, write_csv
 from repro.core.filtering import TaggingExecutor
 from repro.core.ranking import RetrievalExecutor
 

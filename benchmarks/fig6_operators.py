@@ -11,8 +11,6 @@ from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
 from benchmarks.common import Profile, SceneCache, write_csv
 from repro.core import factory, flow, landmarks as lm_mod
 from repro.core.hardware import RPI3

@@ -1,0 +1,33 @@
+"""repro.analysis — repo-aware static analysis for the fleet substrate.
+
+Machine-checks the invariants the substrate's guarantees rest on:
+determinism (DET*: simulated clocks, seeded RNG streams), stepper
+purity (STP*: executors talk to the world only via yielded work items),
+JAX tracing hygiene (TRC*: one trace per signature, no host syncs in
+hot paths), and generic hygiene mirroring the CI ruff gate (GEN*).
+
+Usage::
+
+    python -m repro.analysis src tests benchmarks
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --format json src
+
+See ``docs/ANALYSIS.md`` for the rule table, the per-path config, and
+the waiver-file format (``analysis-waivers.txt`` at the repo root).
+The runtime half of the story — the ``TraceGuard`` retrace monitor —
+lives in ``repro.core.runtime``.
+"""
+from repro.analysis.engine import (DEFAULT_CONFIG, RULES, ModuleInfo,
+                                   Report, Rule, Violation, Waiver,
+                                   check_source, load_waivers, register,
+                                   rule_applies, run_paths)
+from repro.analysis import (rules_determinism, rules_generic,
+                            rules_stepper, rules_tracing)
+
+__all__ = [
+    "DEFAULT_CONFIG", "RULES", "ModuleInfo", "Report", "Rule",
+    "Violation", "Waiver", "check_source", "load_waivers", "register",
+    "rule_applies", "run_paths",
+    "rules_determinism", "rules_generic", "rules_stepper",
+    "rules_tracing",
+]

@@ -1,0 +1,264 @@
+"""JAX tracing-hygiene rules: keep the jit cache small, static, synced.
+
+The >100x-realtime scoring path rests on ``OperatorRuntime``'s cache
+discipline: one compiled function per arch signature, bucketed batch
+shapes, no host round-trips inside traced code. The ROADMAP's top perf
+item is tracing/dispatch overhead eating the Pallas win on small archs
+— exactly what these rules guard:
+
+  TRC001  ``jax.jit`` constructed in a loop or immediately invoked
+          builds a fresh cache per iteration/call: every invocation
+          retraces and recompiles.
+  TRC002  host syncs (``.item()``, ``float(traced)``, ``np.asarray``)
+          inside a jit'd function block dispatch until the device
+          flushes — the classic scoring-hot-path stall.
+  TRC003  non-hashable (list/dict/set) static arguments raise at call
+          time, and mutable defaults on static params retrace per call.
+
+Detection of "jit'd function" covers decorator form (``@jax.jit``,
+``@partial(jax.jit, ...)``) and wrapping form (``fn = jax.jit(f)`` /
+``return jax.jit(f)``), including functions referenced inside transform
+compositions like ``jax.jit(jax.value_and_grad(f))``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import ModuleInfo, Rule, Violation, register
+
+LOOPS = (ast.For, ast.While, ast.AsyncFor)
+COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.SetComp,
+                    ast.DictComp)
+SHAPE_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize", "weak_type"}
+HOST_CASTS = {"float", "int", "bool", "complex"}
+
+
+def is_jit_call(mod: ModuleInfo, node: ast.Call) -> bool:
+    """True for ``jax.jit(...)`` and ``functools.partial(jax.jit, ...)``."""
+    q = mod.qualname(node.func)
+    if q == "jax.jit":
+        return True
+    if q and q.rsplit(".", 1)[-1] == "partial" and node.args:
+        q0 = mod.qualname(node.args[0])
+        return q0 == "jax.jit"
+    return False
+
+
+def _is_jit_decorator(mod: ModuleInfo, dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        return is_jit_call(mod, dec)
+    return mod.qualname(dec) == "jax.jit"
+
+
+def jitted_functions(mod: ModuleInfo) -> Set[ast.AST]:
+    """FunctionDefs whose bodies are traced by jax.jit in this module."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    jitted: Set[ast.AST] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(mod, d) for d in node.decorator_list):
+                jitted.add(node)
+        elif isinstance(node, ast.Call) and is_jit_call(mod, node):
+            args = node.args[1:] if mod.qualname(node.func) != "jax.jit" \
+                else node.args      # skip partial's jax.jit arg itself
+            for a0 in args[:1]:
+                # jax.jit(f) and jax.jit(transform(f)): any plain name
+                # inside the first argument is traced
+                for sub in ast.walk(a0):
+                    if isinstance(sub, ast.Name) and sub.id in defs:
+                        jitted.update(defs[sub.id])
+    return jitted
+
+
+@register
+class JitConstructionRule(Rule):
+    id = "TRC001"
+    name = "tracing-jit-per-call"
+    invariant = ("one trace per arch signature: jax.jit must be "
+                 "constructed once and cached (OperatorRuntime._apply); "
+                 "a jit built per loop iteration or per call retraces "
+                 "every time — the recompile overhead in "
+                 "BENCH_operator_runtime.json")
+    default_paths = ("src/*", "benchmarks/*")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Violation]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and is_jit_call(mod, node)):
+                continue
+            parent = mod.parents.get(node)
+            if isinstance(parent, ast.Call) and parent.func is node:
+                yield self.violation(
+                    mod, node,
+                    "jax.jit(...)(...) compiles and discards per call; "
+                    "bind the jitted function once (module level or a "
+                    "cache dict keyed by signature)")
+                continue
+            anc = node
+            while anc in mod.parents:
+                anc = mod.parents[anc]
+                if isinstance(anc, LOOPS + COMPREHENSIONS):
+                    yield self.violation(
+                        mod, node,
+                        "jax.jit constructed inside a loop builds a "
+                        "fresh compilation cache every iteration; hoist "
+                        "it out or cache per signature")
+                    break
+
+
+@register
+class HostSyncInJitRule(Rule):
+    id = "TRC002"
+    name = "tracing-host-sync"
+    invariant = ("scoring hot paths stay on-device end to end; "
+                 ".item()/float()/np.asarray on a traced value forces a "
+                 "device sync per element — the dispatch overhead the "
+                 "ROADMAP flags on small archs")
+    default_paths = ("src/*", "benchmarks/*")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Violation]:
+        for fn in jitted_functions(mod):
+            params = {a.arg for a in (fn.args.posonlyargs + fn.args.args +
+                                      fn.args.kwonlyargs)} - {"self", "cls"}
+
+            def refs_param(expr: ast.AST) -> bool:
+                return any(isinstance(n, ast.Name) and n.id in params
+                           for n in ast.walk(expr))
+
+            def static_only(expr: ast.AST) -> bool:
+                # x.shape[0] etc. are Python ints at trace time
+                return any(isinstance(n, ast.Attribute) and
+                           n.attr in SHAPE_ATTRS for n in ast.walk(expr))
+
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if isinstance(func, ast.Attribute) and func.attr == "item":
+                    yield self.violation(
+                        mod, node,
+                        f"`.item()` inside jit'd `{fn.name}` forces a "
+                        "host sync per call; return the array and read "
+                        "it outside the traced region")
+                    continue
+                if not (node.args and len(node.args) == 1):
+                    continue
+                arg = node.args[0]
+                if not refs_param(arg) or static_only(arg):
+                    continue
+                if isinstance(func, ast.Name) and func.id in HOST_CASTS:
+                    yield self.violation(
+                        mod, node,
+                        f"`{func.id}(...)` on a traced value inside "
+                        f"jit'd `{fn.name}` synchronizes with the host "
+                        "(or fails under tracing); keep the value as "
+                        "an array")
+                else:
+                    q = mod.qualname(func)
+                    if q in ("numpy.asarray", "numpy.array"):
+                        yield self.violation(
+                            mod, node,
+                            f"`{q}(...)` on a traced value inside jit'd "
+                            f"`{fn.name}` pulls the array to the host "
+                            "mid-trace; use jnp and convert outside")
+
+
+@register
+class NonHashableStaticRule(Rule):
+    id = "TRC003"
+    name = "tracing-static-args"
+    invariant = ("static jit arguments key the compilation cache and "
+                 "must be hashable; list/dict/set values raise at call "
+                 "time or, via conversion, retrace per call")
+    default_paths = ("src/*", "benchmarks/*")
+
+    @staticmethod
+    def _static_spec(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+        nums: Set[int] = set()
+        names: Set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                                  int):
+                        nums.add(n.value)
+            elif kw.arg == "static_argnames":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                                  str):
+                        names.add(n.value)
+        return nums, names
+
+    def check(self, mod: ModuleInfo) -> Iterator[Violation]:
+        # jitted name -> (static positions, static names, def node)
+        specs: Dict[str, Tuple[Set[int], Set[str],
+                               Optional[ast.AST]]] = {}
+        defs: Dict[str, ast.AST] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and is_jit_call(mod, dec):
+                        nums, names = self._static_spec(dec)
+                        if nums or names:
+                            specs[node.name] = (nums, names, node)
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    is_jit_call(mod, node.value):
+                nums, names = self._static_spec(node.value)
+                if not (nums or names):
+                    continue
+                inner = None
+                if node.value.args and \
+                        isinstance(node.value.args[0], ast.Name):
+                    inner = defs.get(node.value.args[0].id)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        specs[tgt.id] = (nums, names, inner)
+
+        # mutable defaults on static params of the wrapped def
+        for name, (nums, names, fn) in specs.items():
+            if fn is None:
+                continue
+            args = fn.args.posonlyargs + fn.args.args
+            defaults = fn.args.defaults
+            offset = len(args) - len(defaults)
+            for i, default in enumerate(defaults):
+                arg = args[offset + i]
+                pos = args.index(arg)
+                if (pos in nums or arg.arg in names) and \
+                        isinstance(default, MUTABLE_LITERALS):
+                    yield self.violation(
+                        mod, default,
+                        f"static parameter `{arg.arg}` of jit'd "
+                        f"`{fn.name}` has a non-hashable default; use a "
+                        "tuple/frozenset or a hashable sentinel")
+
+        # call sites passing mutable literals at static positions
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and
+                    isinstance(node.func, ast.Name) and
+                    node.func.id in specs):
+                continue
+            nums, names, _ = specs[node.func.id]
+            for pos, arg in enumerate(node.args):
+                if pos in nums and isinstance(arg, MUTABLE_LITERALS):
+                    yield self.violation(
+                        mod, arg,
+                        f"non-hashable literal at static position {pos} "
+                        f"of jit'd `{node.func.id}`; static args key "
+                        "the jit cache and must be hashable (tuple)")
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value,
+                                                  MUTABLE_LITERALS):
+                    yield self.violation(
+                        mod, kw.value,
+                        f"non-hashable value for static argument "
+                        f"`{kw.arg}` of jit'd `{node.func.id}`; use a "
+                        "tuple/frozenset")

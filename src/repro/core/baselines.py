@@ -135,7 +135,6 @@ def optop_retrieval(env: QueryEnv, *, full_family: bool = True) -> Progress:
     frames = env.frames
     n = len(frames)
     n_pos = max(env.n_positives, 1)
-    fps_net = env.net.frame_upload_fps
 
     # OptOp gets NO long-term-knowledge operator optimization (full-frame
     # inputs only — the key ZC2 edge it lacks, §8.2-ii) and no w/o-LM
@@ -244,11 +243,11 @@ def preindex_tagging(env: QueryEnv, levels=(30, 10, 5, 2, 1),
     n = len(frames)
     # calibrate index thresholds on landmark frames
     lms = env.store.in_range(frames[0], frames[-1] + 1)
-    lm_idx = np.array([l.idx for l in lms], np.int64)
+    lm_idx = np.array([lm.idx for lm in lms], np.int64)
     if len(lm_idx):
         lm_scores = oracle.score_vec(env.video, lm_idx, env.query.cls,
                                      YOLO_TINY)
-        lm_labels = np.array([l.present(env.query.cls) for l in lms])
+        lm_labels = np.array([lm.present(env.query.cls) for lm in lms])
         lo, hi = calibrate_thresholds(lm_scores, lm_labels, err)
     else:
         lo, hi = 0.2, 0.8

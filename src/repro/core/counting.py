@@ -57,7 +57,7 @@ class MaxCountExecutor:
         cur, trained, t = ses.init_ranker(prog)
 
         # seed best with landmark counts already on the cloud
-        best = max((l.count(env.query.cls) for l in ses.lms), default=0)
+        best = max((lm.count(env.query.cls) for lm in ses.lms), default=0)
         prog.record(t, best / max(gt_max, 1))
         if best >= gt_max:
             prog.done_t = t
@@ -169,7 +169,7 @@ class SampleCountExecutor:
         t = yield UploadTick(env.net.upload_time(n_thumbs=len(lms)),
                              len(lms) * env.net.thumbnail_bytes, at=0.0)
         prog.bytes_up += len(lms) * env.net.thumbnail_bytes
-        samples = [l.count(env.query.cls) for l in lms]
+        samples = [lm.count(env.query.cls) for lm in lms]
 
         def est() -> float:
             if not samples:

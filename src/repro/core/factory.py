@@ -45,8 +45,8 @@ def breed(heat: Optional[np.ndarray], *, full: bool = True) -> List[OperatorArch
                 0.9 * skew.region_fraction(r95, FRAME_H, FRAME_W):
             regions.append((r80, "r80"))
     if full:
-        grid = [(l, c, d, s)
-                for l in (2, 3, 4, 5)
+        grid = [(nl, c, d, s)
+                for nl in (2, 3, 4, 5)
                 for c, d in ((8, 16), (16, 32), (32, 64))
                 for s in (25, 50, 100)]
         # 4 depths x 3 widths x 3 sizes = 36 per region; cap at ~40 total
@@ -54,21 +54,22 @@ def breed(heat: Optional[np.ndarray], *, full: bool = True) -> List[OperatorArch
         # for the others.
         archs = []
         best_region = regions[-1]
-        for (l, c, d, s) in grid:
+        for (nl, c, d, s) in grid:
             reg, tag = best_region
-            archs.append(OperatorArch(f"op_L{l}c{c}s{s}_{tag}", l, c, d, s, reg))
+            archs.append(OperatorArch(f"op_L{nl}c{c}s{s}_{tag}", nl, c, d, s,
+                                      reg))
         for reg, tag in regions[:-1]:
-            for (l, c, d, s) in ((2, 8, 16, 25), (3, 16, 32, 50),
-                                 (5, 32, 64, 100)):
-                archs.append(OperatorArch(f"op_L{l}c{c}s{s}_{tag}", l, c, d,
+            for (nl, c, d, s) in ((2, 8, 16, 25), (3, 16, 32, 50),
+                                  (5, 32, 64, 100)):
+                archs.append(OperatorArch(f"op_L{nl}c{c}s{s}_{tag}", nl, c, d,
                                           s, reg))
         return archs[:42]
     # reduced family (tests / CI)
     archs = []
     for reg, tag in regions:
-        for (l, c, d, s) in ((2, 8, 16, 25), (3, 16, 32, 50),
-                             (4, 16, 32, 50), (5, 32, 64, 100)):
-            archs.append(OperatorArch(f"op_L{l}c{c}s{s}_{tag}", l, c, d, s,
+        for (nl, c, d, s) in ((2, 8, 16, 25), (3, 16, 32, 50),
+                              (4, 16, 32, 50), (5, 32, 64, 100)):
+            archs.append(OperatorArch(f"op_L{nl}c{c}s{s}_{tag}", nl, c, d, s,
                                       reg))
     return archs
 

@@ -15,7 +15,7 @@ thumbnail upload, simulated by the executor) and derives:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -45,10 +45,10 @@ class LandmarkStore:
 
     @property
     def indices(self) -> np.ndarray:
-        return np.array([l.idx for l in self.landmarks], np.int64)
+        return np.array([lm.idx for lm in self.landmarks], np.int64)
 
     def in_range(self, t0: int, t1: int) -> List[Landmark]:
-        return [l for l in self.landmarks if t0 <= l.idx < t1]
+        return [lm for lm in self.landmarks if t0 <= lm.idx < t1]
 
 
 def build_landmarks(video: Video, interval: int,
@@ -91,11 +91,12 @@ def positive_ratio(store: LandmarkStore, cls: str) -> float:
     """R_pos estimate used by the initial-operator rule (§6.1)."""
     if not store.landmarks:
         return 0.5
-    return float(np.mean([l.present(cls) for l in store.landmarks]))
+    return float(np.mean([lm.present(cls) for lm in store.landmarks]))
 
 
 def count_stats(store: LandmarkStore, cls: str) -> dict:
-    counts = np.array([l.count(cls) for l in store.landmarks], np.float64)
+    counts = np.array([lm.count(cls) for lm in store.landmarks],
+                      np.float64)
     if len(counts) == 0:
         return {"mean": 0.0, "median": 0.0, "max": 0.0}
     return {"mean": float(counts.mean()), "median": float(np.median(counts)),
@@ -106,7 +107,7 @@ def training_set(store: LandmarkStore, cls: str,
                  limit: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(frame_idxs, labels, counts) for operator bootstrapping (§4)."""
     lms = store.landmarks if limit is None else store.landmarks[:limit]
-    idxs = np.array([l.idx for l in lms], np.int64)
-    labels = np.array([l.present(cls) for l in lms], np.float32)
-    counts = np.array([l.count(cls) for l in lms], np.float32)
+    idxs = np.array([lm.idx for lm in lms], np.int64)
+    labels = np.array([lm.present(cls) for lm in lms], np.float32)
+    counts = np.array([lm.count(cls) for lm in lms], np.float32)
     return idxs, labels, counts

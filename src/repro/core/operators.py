@@ -190,15 +190,15 @@ def calibrate_thresholds(scores: np.ndarray, labels: np.ndarray,
     scores = np.asarray(scores, np.float64)
     labels = np.asarray(labels, bool)
     order = np.argsort(scores, kind="stable")
-    s, l = scores[order], labels[order]
-    n_pos = max(l.sum(), 1)
-    n_neg = max((~l).sum(), 1)
+    s, lab = scores[order], labels[order]
+    n_pos = max(lab.sum(), 1)
+    n_neg = max((~lab).sum(), 1)
     # lo: largest cut with cumulative positives below <= err * n_pos
-    cum_pos = np.cumsum(l)
+    cum_pos = np.cumsum(lab)
     k = int(np.searchsorted(cum_pos, err * n_pos, side="right"))
     lo = s[k - 1] + 1e-9 if k > 0 else 0.0
     # hi: smallest cut with negatives above <= err * n_neg
-    cum_neg_above = np.cumsum((~l)[::-1])[::-1]
+    cum_neg_above = np.cumsum((~lab)[::-1])[::-1]
     ks = np.nonzero(cum_neg_above <= err * n_neg)[0]
     hi = s[ks[0]] - 1e-9 if len(ks) else 1.0
     if hi < lo:

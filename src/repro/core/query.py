@@ -8,7 +8,7 @@ exactly the paper's definition — so execution and evaluation agree.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

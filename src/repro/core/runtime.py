@@ -66,6 +66,10 @@ class OperatorRuntime:
         self._apply_group: Dict[ArchSig, Callable] = {}
         self._traces: Dict[ArchSig, int] = {}
         self._group_traces: Dict[ArchSig, int] = {}
+        # (sig, shape-key) -> trace count; the invariant TraceGuard
+        # asserts is that no key ever reaches 2 (shapes are bucketed, so
+        # distinct buckets tracing once each is expected and fine)
+        self._shape_traces: Dict[Tuple[ArchSig, tuple], int] = {}
         self.calls = 0
         self.frames_scored = 0
 
@@ -100,12 +104,23 @@ class OperatorRuntime:
 
         return scorer
 
+    def _record_trace(self, sig: ArchSig, shape_key: tuple,
+                      *, grouped: bool = False) -> None:
+        """Called from inside traced bodies — i.e. at trace time only —
+        so the counters tally compilations, not dispatches."""
+        if grouped:
+            self._group_traces[sig] = self._group_traces.get(sig, 0) + 1
+        else:
+            self._traces[sig] = self._traces.get(sig, 0) + 1
+        key = (sig, shape_key)
+        self._shape_traces[key] = self._shape_traces.get(key, 0) + 1
+
     def _build(self, sig: ArchSig) -> Callable:
         body = self._scorer_body(sig)
 
         def scorer(params, x):
             # executes at trace time only: counts compilations per sig
-            self._traces[sig] = self._traces.get(sig, 0) + 1
+            self._record_trace(sig, tuple(x.shape))
             return body(params, x)
 
         return jax.jit(scorer)
@@ -122,7 +137,8 @@ class OperatorRuntime:
             body = self._scorer_body(sig)
 
             def grouped(params_seq, x_seq):
-                self._group_traces[sig] = self._group_traces.get(sig, 0) + 1
+                self._record_trace(
+                    sig, tuple(tuple(x.shape) for x in x_seq), grouped=True)
                 return tuple(body(p, x) for p, x in zip(params_seq, x_seq))
 
             fn = jax.jit(grouped)
@@ -254,6 +270,92 @@ class OperatorRuntime:
                 for chunk, (p, c) in zip(part, outs):
                     scatter(chunk, p, c)
         return results
+
+
+# -- trace accounting ---------------------------------------------------------
+
+
+def sig_str(sig: ArchSig) -> str:
+    """Stable human-readable key for an arch signature (bench reports)."""
+    return f"L{sig[0]}c{sig[1]}d{sig[2]}s{sig[3]}"
+
+
+class RetraceError(AssertionError):
+    """A (arch signature, batch shape) was traced more than once."""
+
+
+class TraceGuard:
+    """Asserts the one-trace-per-(arch signature, batch shape) invariant
+    over a code region.
+
+    The runtime's whole performance story is the compilation cache:
+    each arch signature compiles once per bucketed batch shape and every
+    later call is a cache hit. A *retrace* — the same (signature, shape)
+    traced twice — means something destroyed cache keys (params dtype
+    drift, a rebuilt jit wrapper, an unbucketed shape) and silently
+    re-pays compile time per call; exactly the tracing/dispatch overhead
+    flagged in the ROADMAP. Usage::
+
+        with TraceGuard(runtime) as guard:
+            ... score ...
+        # raises RetraceError on exit if any (sig, shape) retraced
+        guard.traces_per_arch   # {"L2c8d16s25": 3, ...} for reports
+
+    ``check_on_exit=False`` turns the exit check off for callers that
+    only want the accounting (benchmarks recording traces_per_arch).
+    Static-analysis counterpart: rules TRC001-003 in ``repro.analysis``.
+    """
+
+    def __init__(self, runtime: Optional[OperatorRuntime] = None,
+                 *, check_on_exit: bool = True):
+        self.runtime = runtime
+        self.check_on_exit = check_on_exit
+        self._before: Dict[Tuple[ArchSig, tuple], int] = {}
+
+    def __enter__(self) -> "TraceGuard":
+        if self.runtime is None:
+            self.runtime = get_runtime()
+        self._before = dict(self.runtime._shape_traces)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None and self.check_on_exit:
+            self.check()
+        return False
+
+    @property
+    def new_traces(self) -> Dict[Tuple[ArchSig, tuple], int]:
+        """(sig, shape-key) -> traces recorded inside the region."""
+        out: Dict[Tuple[ArchSig, tuple], int] = {}
+        for key, n in self.runtime._shape_traces.items():
+            delta = n - self._before.get(key, 0)
+            if delta:
+                out[key] = delta
+        return out
+
+    @property
+    def traces_per_arch(self) -> Dict[str, int]:
+        """sig-string -> traces inside the region, summed over shapes."""
+        out: Dict[str, int] = {}
+        for (sig, _shape), delta in self.new_traces.items():
+            key = sig_str(sig)
+            out[key] = out.get(key, 0) + delta
+        return out
+
+    def check(self) -> None:
+        """Raise RetraceError if any (sig, shape) traced inside the
+        region had already been traced (or traced twice inside it)."""
+        bad = []
+        for key, delta in self.new_traces.items():
+            total = self._before.get(key, 0) + delta
+            if total > 1:
+                sig, shape = key
+                bad.append(f"  {sig_str(sig)} shape={shape}: "
+                           f"{total} traces ({delta} in guarded region)")
+        if bad:
+            raise RetraceError(
+                "retrace detected — each (arch signature, batch shape) "
+                "must trace exactly once per runtime:\n" + "\n".join(bad))
 
 
 # -- process-global runtime ---------------------------------------------------

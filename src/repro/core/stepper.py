@@ -65,7 +65,7 @@ def drive(gen: Stepper, session=None, *,
     scoring through ``session.score`` (or a custom ``score`` callback).
     Returns the generator's return value (the ``Progress``)."""
     if score is None and session is not None:
-        def score(d):  # noqa: E731 — default: the session fast path
+        def score(d):  # default: the session fast path
             return session.score(d.trained, d.idxs)
     resp = None
     while True:

@@ -10,8 +10,8 @@ training for the accuracy.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -87,8 +87,8 @@ class CloudTrainer:
     # -- sample pool ---------------------------------------------------------
 
     def add_samples(self, idxs, labels, counts) -> None:
-        for i, l, c in zip(idxs, labels, counts):
-            self._pool[int(i)] = (float(l), float(c))
+        for i, lab, c in zip(idxs, labels, counts):
+            self._pool[int(i)] = (float(lab), float(c))
 
     @property
     def n_samples(self) -> int:

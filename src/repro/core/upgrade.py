@@ -10,8 +10,7 @@ the policy adapts to bandwidth changes mid-query (§6.1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -18,8 +18,7 @@ and is what the detector oracle corrupts per accuracy tier.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

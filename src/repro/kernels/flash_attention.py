@@ -81,8 +81,8 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(ki == pl.num_programs(2) - 1)
     def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lsum = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / lsum[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -91,7 +91,8 @@ def count_params(tree) -> int:
     import math
     leaves = jax.tree_util.tree_leaves(tree)
     # math.prod, NOT jnp.prod: int32 overflows at llama4's 386B experts
-    return int(sum(math.prod(l.shape) if l.shape else 1 for l in leaves))
+    return int(sum(math.prod(leaf.shape) if leaf.shape else 1
+                   for leaf in leaves))
 
 
 def active_params(cfg) -> int:

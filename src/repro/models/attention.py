@@ -124,7 +124,7 @@ def _chunk_attend(q, k, v, qpos, kpos, window: Optional[int], scale: float,
     ps = kpos.reshape(n, kvc)
 
     def body(carry, inp):
-        acc, m, l = carry
+        acc, m, denom = carry
         kc, vc, pc = inp
         kc = shard(kc, "batch", None, "heads", None)
         s = jnp.einsum("bqhd,bshd->bhqs", q, kc,
@@ -136,19 +136,19 @@ def _chunk_attend(q, k, v, qpos, kpos, window: Optional[int], scale: float,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        denom = denom * corr + jnp.sum(p, axis=-1)
         acc = shard(acc * corr[..., None] + jnp.einsum(
             "bhqs,bshd->bhqd", p.astype(vc.dtype), vc,
             preferred_element_type=jnp.float32),
             "batch", "heads", None, None)
-        return (acc, m_new, l), None
+        return (acc, m_new, denom), None
 
     acc0 = shard(jnp.zeros((B, H, qc, D), jnp.float32),
                  "batch", "heads", None, None)
     m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, H, qc), jnp.float32)
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
-    return acc, m, l
+    (acc, m, denom), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
+    return acc, m, denom
 
 
 def chunked_attention(q, k, v, *, window: Optional[int] = None,
@@ -175,9 +175,11 @@ def chunked_attention(q, k, v, *, window: Optional[int] = None,
         if window is not None:
             lo = max(0, s0 + q_offset - (window - 1))
             lo = (lo // kv_chunk) * kv_chunk
-        acc, m, l = _chunk_attend(qi, k[:, lo:hi], v[:, lo:hi], qpos,
-                                  jnp.arange(lo, hi), window, scale, kv_chunk)
-        outs.append((acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype))
+        acc, m, denom = _chunk_attend(qi, k[:, lo:hi], v[:, lo:hi], qpos,
+                                      jnp.arange(lo, hi), window, scale,
+                                      kv_chunk)
+        outs.append(
+            (acc / jnp.maximum(denom[..., None], 1e-30)).astype(q.dtype))
     out = jnp.concatenate(outs, axis=2) if nq > 1 else outs[0]
     return out.transpose(0, 2, 1, 3)         # (B,H,S,D) -> (B,S,H,D)
 

@@ -16,7 +16,6 @@ Logical axis names (mapped to mesh axes in ``repro.parallel.sharding``):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax

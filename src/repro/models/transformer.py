@@ -17,7 +17,6 @@ Entry points:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

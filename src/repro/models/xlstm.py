@@ -67,7 +67,10 @@ def init_mlstm(key, d: int, n_heads: int, *, expand: int,
     ks = jax.random.split(key, 7)
     di = d * expand
     s = ("layer",) * len(stack)
-    n = lambda *ax: s + ax
+
+    def n(*ax):
+        return s + ax
+
     return {
         "w_up": layers.param(ks[0], stack + (d, 2 * di), n("embed", None), dtype),
         "conv_w": layers.param(ks[1], stack + (4, di), n(None, None), dtype, scale=0.5),
@@ -231,7 +234,10 @@ def init_slstm(key, d: int, n_heads: int, *, ff_expand: float,
     dh = d // n_heads
     ffs = int(round(d * ff_expand / 64)) * 64 or 64
     s = ("layer",) * len(stack)
-    n = lambda *ax: s + ax
+
+    def n(*ax):
+        return s + ax
+
     return {
         "w_in": layers.param(ks[0], stack + (d, 4 * d), n("embed", None), dtype),
         "b_in": layers.zeros_param(stack + (4 * d,), n(None), dtype),

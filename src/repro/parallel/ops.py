@@ -7,7 +7,6 @@ single-device tests so model code can call it unconditionally.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

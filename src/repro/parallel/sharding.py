@@ -15,7 +15,6 @@ Default rules (see DESIGN.md §4):
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

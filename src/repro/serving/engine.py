@@ -13,7 +13,7 @@ uploaded frames/token-spans are scored by a zoo model served here
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ import os
 import re
 import shutil
 from pathlib import Path
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

@@ -9,7 +9,7 @@ it), plus deterministic "document" boundaries.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

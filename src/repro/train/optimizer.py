@@ -52,8 +52,8 @@ def schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree):
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def apply_updates(cfg: AdamWConfig, params, grads, state: OptState):

@@ -7,10 +7,7 @@ launch/train.py).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer
 from repro.train import optimizer as opt
@@ -18,7 +15,8 @@ from repro.train import optimizer as opt
 
 def make_train_step(cfg, opt_cfg: opt.AdamWConfig):
     def train_step(params, opt_state, batch):
-        loss_fn = lambda p: transformer.train_loss(cfg, p, batch)
+        def loss_fn(p):
+            return transformer.train_loss(cfg, p, batch)
         loss, grads = jax.value_and_grad(loss_fn)(params)
         params, opt_state, metrics = opt.apply_updates(
             opt_cfg, params, grads, opt_state)

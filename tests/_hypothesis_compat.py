@@ -6,6 +6,8 @@ the real objects; when it is absent, ``@given`` turns the test into a
 skip (and the rest of the suite still collects and runs). Install the
 real dependency with ``pip install -e .[test]``.
 """
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "given", "settings", "st"]
+
 try:
     from hypothesis import HealthCheck, given, settings, strategies
 

@@ -15,7 +15,6 @@ TESTS = str(Path(__file__).resolve().parent)
 if TESTS not in sys.path:
     sys.path.insert(0, TESTS)
 
-import numpy as np
 import pytest
 from _hypothesis_compat import HealthCheck, settings
 

@@ -1,0 +1,269 @@
+"""repro.analysis: per-rule bad/good fixtures, waivers, noqa, CLI, and
+the live-tree self-check (the repo must stay clean under its own lint).
+
+Each rule gets at least one fixture that MUST fire and one that MUST
+NOT — the not-cases encode the false-positive bar (class attributes are
+not builtin shadows, ``__init__`` re-exports are not unused imports,
+``jax.jit`` in ``__init__`` is not per-call construction, ...).
+"""
+import json
+
+import pytest
+
+from repro.analysis import (RULES, Report, check_source, load_waivers,
+                            run_paths)
+from repro.analysis.__main__ import main as cli_main
+
+SRC = "src/repro/core/x.py"      # default path: all src rules apply
+
+
+def findings(source, path=SRC, **kw):
+    return [(v.rule, v.line) for v in check_source(source, path, **kw)]
+
+
+def rules_fired(source, path=SRC, **kw):
+    return {r for r, _ in findings(source, path, **kw)}
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: (rule, must-fire source, must-not-fire source)
+# ---------------------------------------------------------------------------
+
+FIXTURES = [
+    ("DET001",
+     "import time\n\ndef step():\n    return time.time()\n",
+     "def step(clock):\n    return clock.now_s\n"),
+    ("DET001",  # aliased from-import + datetime.now
+     "from time import perf_counter as pc\n\ndef f():\n    return pc()\n",
+     "from time import sleep\n\ndef f():\n    sleep(0)\n"),
+    ("DET002",
+     "import random\n\ndef f():\n    return random.random()\n",
+     "import numpy as np\n\ndef f():\n    return "
+     "np.random.default_rng(7).uniform()\n"),
+    ("DET002",  # unseeded generator + ambient module RNG
+     "import numpy as np\n\ndef f():\n    rng = np.random.default_rng()\n"
+     "    return np.random.uniform()\n",
+     "import numpy as np\n\ndef f(seed):\n    return "
+     "np.random.default_rng(seed).normal()\n"),
+    ("STP001",
+     "from repro.core.stepper import ScoreDemand\n\n"
+     "def steps(ses, trained, idxs):\n"
+     "    p, c = ses.score(trained, idxs)\n"
+     "    yield ScoreDemand(trained, idxs)\n",
+     "from repro.core.stepper import ScoreDemand\n\n"
+     "def steps(trained, idxs):\n"
+     "    p, c = yield ScoreDemand(trained, idxs)\n"),
+    ("STP001",  # reaching the process-global runtime from a stepper
+     "from repro.core.runtime import get_runtime\n"
+     "from repro.core.stepper import ScoreDemand\n\n"
+     "def steps(trained, idxs):\n"
+     "    rt = get_runtime()\n"
+     "    yield ScoreDemand(trained, idxs)\n",
+     "from repro.core.runtime import get_runtime\n\n"
+     "def plain(trained, bank, idxs):\n"
+     "    return get_runtime().score(trained, bank, idxs)\n"),
+    ("STP002",
+     "from repro.core.stepper import UploadTick\n\nN = 0\n\n"
+     "def upload(nbytes):\n    global N\n    N += 1\n"
+     "    yield UploadTick(1.0, nbytes)\n",
+     "from repro.core.stepper import UploadTick\n\n"
+     "def upload(nbytes, prog):\n    prog.bytes_up += nbytes\n"
+     "    yield UploadTick(1.0, nbytes)\n"),
+    ("STP003",
+     "from repro.core.stepper import UploadTick\n\n"
+     "def upload(nbytes):\n"
+     "    open('/tmp/log', 'w').write('x')\n"
+     "    yield UploadTick(1.0, nbytes)\n",
+     "def tool(path):\n    return open(path).read()\n"),
+    ("STP003",  # os-level I/O inside a stepper (os.path is fine)
+     "import os\nfrom repro.core.stepper import UploadTick\n\n"
+     "def upload(nbytes):\n    os.remove('/tmp/x')\n"
+     "    yield UploadTick(1.0, nbytes)\n",
+     "import os.path\nfrom repro.core.stepper import UploadTick\n\n"
+     "def upload(nbytes):\n    p = os.path.join('a', 'b')\n"
+     "    yield UploadTick(1.0, nbytes)\n"),
+    ("TRC001",
+     "import jax\n\ndef f(fns, x):\n    out = []\n"
+     "    for fn in fns:\n        out.append(jax.jit(fn)(x))\n"
+     "    return out\n",
+     "import jax\n\nclass R:\n    def __init__(self, fn):\n"
+     "        self._fn = jax.jit(fn)\n"),
+    ("TRC001",  # immediately-invoked jit
+     "import jax\n\ndef f(g, x):\n    return jax.jit(g)(x)\n",
+     "import jax\n\ndef make(g):\n    return jax.jit(g)\n"),
+    ("TRC002",
+     "import jax\n\n@jax.jit\ndef f(x):\n    return x * x.sum().item()\n",
+     "import jax\n\n@jax.jit\ndef f(x):\n    return x * x.sum()\n"),
+    ("TRC002",  # float() cast on a traced param; shape reads are fine
+     "import jax\n\n@jax.jit\ndef f(x):\n    s = float(x)\n    return s\n",
+     "import jax\n\n@jax.jit\ndef f(x):\n    n = float(x.shape[0])\n"
+     "    return x / n\n"),
+    ("TRC003",
+     "import jax\nimport functools\n\n"
+     "@functools.partial(jax.jit, static_argnames=('dims',))\n"
+     "def f(x, dims=[1, 2]):\n    return x\n",
+     "import jax\nimport functools\n\n"
+     "@functools.partial(jax.jit, static_argnames=('dims',))\n"
+     "def f(x, dims=(1, 2)):\n    return x\n"),
+    ("TRC003",  # mutable literal at a static call-site position
+     "import jax\n\ndef g(x, dims):\n    return x\n\n"
+     "gj = jax.jit(g, static_argnums=(1,))\n\n"
+     "def h(x):\n    return gj(x, [1, 2])\n",
+     "import jax\n\ndef g(x, dims):\n    return x\n\n"
+     "gj = jax.jit(g, static_argnums=(1,))\n\n"
+     "def h(x):\n    return gj(x, (1, 2))\n"),
+    ("GEN001",
+     "import os\n\nVALUE = 1\n",
+     "import os\n\nVALUE = os.sep\n"),
+    ("GEN001",  # __all__ strings count as uses
+     "from x import helper\n\nVALUE = 1\n",
+     "from x import helper\n\n__all__ = ['helper']\n"),
+    ("GEN002",
+     "def f(xs=[]):\n    return xs\n",
+     "def f(xs=()):\n    return xs\n"),
+    ("GEN003",
+     "def f(list):\n    return list\n",
+     "class C:\n    id = 'DET001'\n"),   # class attrs are namespaced
+    ("GEN004",
+     "def f(xs):\n    l = len(xs)\n    return l\n",
+     "def f(xs):\n    n = len(xs)\n    return n\n"),
+    ("GEN005",
+     "def f():\n    return 1\n\ndef f():\n    return 2\n",
+     "import functools\n\ndef f():\n    return 1\n\n"
+     "@functools.wraps(f)\ndef g():\n    return 2\n"),
+    ("GEN006",
+     "def f(xs):\n    n = len(xs)\n    return 0\n",
+     "def f(xs):\n    n = len(xs)\n    return n\n"),
+    ("GEN006",  # class-body assigns are attributes, not locals
+     "def f():\n    total = 0\n    return 1\n",
+     "def f():\n    class T:\n        gamma = 0.5\n    return T\n"),
+]
+
+
+@pytest.mark.parametrize(
+    "rule,bad,good",
+    FIXTURES, ids=[f"{r}-{i}" for i, (r, _, _) in enumerate(FIXTURES)])
+def test_rule_fixture(rule, bad, good):
+    assert rule in rules_fired(bad), f"{rule} must fire on the bad fixture"
+    assert rule not in rules_fired(good), \
+        f"{rule} must not fire on the good fixture"
+
+
+def test_every_registered_rule_has_a_failing_fixture():
+    """The acceptance bar: >=6 distinct rules, each locked down by at
+    least one must-fire fixture above."""
+    covered = {r for r, _, _ in FIXTURES}
+    assert covered == set(RULES), \
+        f"rules without fixtures: {set(RULES) - covered}"
+    assert len(covered) >= 6
+
+
+# ---------------------------------------------------------------------------
+# config, waivers, noqa
+# ---------------------------------------------------------------------------
+
+WALLCLOCK = "import time\n\ndef f():\n    return time.time()\n"
+
+
+def test_per_path_config_scopes_rules():
+    # DET rules are on under src/, off in tests/ and benchmarks/
+    assert "DET001" in rules_fired(WALLCLOCK, "src/repro/core/x.py")
+    assert "DET001" not in rules_fired(WALLCLOCK, "tests/test_x.py")
+    assert "DET001" not in rules_fired(WALLCLOCK, "benchmarks/bench_x.py")
+    # __init__ re-exports are exempt from GEN001
+    reexport = "from repro.core.runtime import OperatorRuntime\n"
+    assert "GEN001" in rules_fired(reexport, "src/repro/core/x.py")
+    assert "GEN001" not in rules_fired(
+        reexport, "src/repro/core/__init__.py")
+
+
+def test_waiver_file_suppresses_and_tracks_usage(tmp_path):
+    wf = tmp_path / "waivers.txt"
+    wf.write_text(
+        "# comment\n"
+        "src/repro/launch/* DET001 real-host tool timing\n"
+        "src/repro/never/*  GEN001 never matches anything\n")
+    waivers = load_waivers(wf)
+    assert len(waivers) == 2
+
+    report = Report()
+    unwaived = check_source(WALLCLOCK, "src/repro/launch/tool.py",
+                            waivers=waivers, report=report)
+    assert unwaived == [] and report.ok
+    assert [v.rule for v, _ in report.waived] == ["DET001"]
+    assert waivers[0].used and not waivers[1].used
+    # the same finding without a waiver comes back unwaived
+    assert check_source(WALLCLOCK, "src/repro/launch/tool.py")
+
+
+def test_waiver_without_justification_rejected(tmp_path):
+    wf = tmp_path / "waivers.txt"
+    wf.write_text("src/* DET001\n")
+    with pytest.raises(ValueError, match="justification"):
+        load_waivers(wf)
+
+
+def test_inline_noqa():
+    src = "import time\n\ndef f():\n    return time.time()  # noqa\n"
+    assert findings(src) == []
+    src = ("import time\n\ndef f():\n"
+           "    return time.time()  # noqa: DET001\n")
+    assert findings(src) == []
+    src = ("import time\n\ndef f():\n"
+           "    return time.time()  # noqa: GEN001\n")
+    assert "DET001" in rules_fired(src)   # wrong rule id: still fires
+
+
+def test_rule_filter():
+    src = "import os\nimport time\n\ndef f():\n    return time.time()\n"
+    only_det = rules_fired(src, rules=["DET*"])
+    assert only_det == {"DET001"}
+
+
+def test_syntax_error_is_reported_not_raised():
+    out = check_source("def broken(:\n", SRC)
+    assert [v.rule for v in out] == ["PARSE000"]
+
+
+# ---------------------------------------------------------------------------
+# CLI and live tree
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "x.py").write_text(WALLCLOCK)
+    assert cli_main([str(bad / "x.py"), "--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "DET001" in out
+
+    assert cli_main([str(bad / "x.py"), "--root", str(tmp_path),
+                     "--format", "json"]) == 1
+    data = json.loads(capsys.readouterr().out)
+    assert data["violations"][0]["rule"] == "DET001"
+    assert data["ok"] is False
+
+    (bad / "x.py").write_text("def f(clock):\n    return clock.now_s\n")
+    assert cli_main([str(bad / "x.py"), "--root", str(tmp_path)]) == 0
+
+    assert cli_main(["--list-rules"]) == 0
+    listing = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in listing
+
+    assert cli_main([str(tmp_path / "missing.py"),
+                     "--root", str(tmp_path)]) == 2
+
+
+def test_live_tree_is_clean():
+    """The repo passes its own analysis (CI gate: python -m
+    repro.analysis src tests benchmarks)."""
+    from pathlib import Path
+
+    import repro.analysis
+    # src/repro/analysis/__init__.py -> repo root (repro is a namespace
+    # package, so repro.__file__ is None)
+    root = Path(repro.analysis.__file__).resolve().parents[3]
+    report = run_paths(["src", "tests", "benchmarks"], root=root)
+    assert report.ok, "\n" + report.render_text()

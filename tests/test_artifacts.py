@@ -3,7 +3,6 @@ compiled, and the recorded roofline terms are self-consistent with the
 cached HLO. (The compiles themselves take ~45 min on this host and are
 run via `python -m repro.launch.dryrun`; tests validate the artifacts.)"""
 import json
-from pathlib import Path
 
 import pytest
 

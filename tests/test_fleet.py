@@ -12,7 +12,8 @@ from repro.core.fleet import FleetScheduler, make_executor
 from repro.core.hardware import YOLO_V3, NetworkModel
 from repro.core.operators import OperatorArch, init_operator
 from repro.core.query import Query, make_env
-from repro.core.runtime import OperatorRuntime, set_runtime
+from repro.core.runtime import (OperatorRuntime, RetraceError, TraceGuard,
+                                set_runtime)
 from repro.core.training import FrameBank
 from repro.core.video import QUERY_CLASS, Video, corpus
 
@@ -73,17 +74,18 @@ def fleet_vs_solo(fleet_world):
         sched = FleetScheduler(contended=False)
         for i, (cam, kind, kw) in enumerate(SPECS):
             sched.add(f"q{i}", cam, _executor(fleet_world, cam, kind), **kw)
-        fleet = sched.run()
+        with TraceGuard(rt) as guard:
+            fleet = sched.run()
     finally:
         set_runtime(prev)
-    return solo, fleet, solo_calls, sched
+    return solo, fleet, solo_calls, sched, guard
 
 
 def test_fleet_matches_standalone_bitwise(fleet_vs_solo):
     """Acceptance: with uncontended bandwidth, every query's Progress
     under the FleetScheduler is bit-identical to its standalone run —
     same refinement points, bytes, op switches, completion time."""
-    solo, fleet, _, sched = fleet_vs_solo
+    solo, fleet, _, sched, _ = fleet_vs_solo
     assert len(fleet) == len(SPECS) >= 8
     assert sched.stats["cameras"] >= 3
     for i, standalone in enumerate(solo):
@@ -98,9 +100,39 @@ def test_fleet_batches_scoring_into_fewer_dispatches(fleet_vs_solo):
     """Cross-query batching: interleaving must need strictly fewer
     OperatorRuntime dispatches than sequential execution of the same
     workload (same frames scored)."""
-    _, _, solo_calls, sched = fleet_vs_solo
+    _, _, solo_calls, sched, _ = fleet_vs_solo
     assert sched.stats["dispatches"] < solo_calls
     assert sched.stats["frames_scored"] > 0
+
+
+def test_fleet_single_trace_per_arch_signature(fleet_vs_solo):
+    """Tracing-hygiene acceptance: across the whole 8-query fleet run,
+    every (arch signature, batch shape) traced exactly once — the
+    TraceGuard exit check passed inside the fixture, and per-arch trace
+    counts never exceed the (small) bucketed-shape vocabulary."""
+    _, _, _, sched, guard = fleet_vs_solo
+    guard.check()                       # idempotent; raises on retrace
+    per_arch = guard.traces_per_arch
+    assert per_arch, "fleet run must have traced at least one arch"
+    # every trace inside the run was the first for its (sig, shape)
+    for key, n in guard.new_traces.items():
+        assert n == 1, f"{key} traced {n}x inside the fleet run"
+
+
+def test_trace_guard_raises_on_retrace():
+    """TraceGuard surfaces a retrace as RetraceError with the offending
+    signature/shape in the message."""
+    rt = OperatorRuntime(backend="jnp")
+    sig = (2, 8, 16, 25)
+    with pytest.raises(RetraceError, match="L2c8d16s25"):
+        with TraceGuard(rt):
+            # simulate the same (sig, shape) tracing twice
+            rt._record_trace(sig, (64, 25, 25, 3))
+            rt._record_trace(sig, (64, 25, 25, 3))
+    # distinct shapes are NOT a violation (bucketed shape vocabulary)
+    with TraceGuard(rt, check_on_exit=True):
+        rt._record_trace(sig, (128, 25, 25, 3))
+        rt._record_trace(sig, (256, 25, 25, 3))
 
 
 def test_score_demands_fused_dispatch_bitwise():

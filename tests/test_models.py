@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 from numpy.testing import assert_allclose
 
-from repro.configs.base import ARCH_IDS, SHAPES, all_cells, cells_for, \
-    get_config, get_smoke_config
+from repro.configs.base import ARCH_IDS, all_cells, get_config, \
+    get_smoke_config
 from repro.models import attention, layers, moe, ssm, transformer as tf, xlstm
 
 
@@ -456,7 +456,6 @@ def test_mlstm_grad_finite_long_seq():
 def test_moe_grouped_dispatch_matches_global(monkeypatch):
     """Locality-aware dispatch (G>1) == global dispatch (G=1) when the
     capacity is ample (no drops) — the §Perf iter-4 semantics contract."""
-    from repro.parallel import ops as pops
     d, ff, E = 16, 32, 4
     p = moe.init_moe(jax.random.PRNGKey(7), d, ff, E, 0, (), jnp.float32)
     params, _ = layers.split_annotated(p)

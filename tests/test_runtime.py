@@ -10,7 +10,7 @@ from numpy.testing import assert_allclose
 
 from repro.core.operators import (OperatorArch, init_operator, score_frames)
 from repro.core.query import Query, make_env
-from repro.core.runtime import (OperatorRuntime, arch_signature, get_runtime,
+from repro.core.runtime import (OperatorRuntime, arch_signature,
                                 set_runtime)
 from repro.core.training import FrameBank
 from repro.kernels import ops as kops

@@ -59,7 +59,7 @@ def test_engine_batching_is_isolation_safe(small_lm):
     want = solo.run()[r]
     multi = ServeEngine(cfg, params, slots=2, cache_len=64)
     ra = multi.submit(p1, max_new=4)
-    rb = multi.submit(p2, max_new=4)
+    multi.submit(p2, max_new=4)
     got = multi.run()
     assert got[ra] == want
 

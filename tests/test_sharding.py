@@ -7,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, st
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.configs.base import get_config, get_smoke_config
+from repro.configs.base import get_config
 from repro.models import layers, transformer as tf
 from repro.parallel import sharding
 

@@ -1,9 +1,5 @@
 """Substrate tests: optimizer, checkpointing (fault-tolerance drills),
 data pipeline determinism, elastic re-mesh + straggler policy."""
-import json
-import shutil
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,7 +22,8 @@ def test_adamw_optimizes_quadratic():
                           weight_decay=0.0, clip_norm=100.0)
     params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
     state = opt.init_opt_state(params)
-    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
     l0 = float(loss(params))
     for _ in range(150):
         grads = jax.grad(loss)(params)

@@ -7,11 +7,10 @@ from _hypothesis_compat import given, settings, st
 from repro.core import factory, flow, landmarks as lm_mod, oracle, skew, \
     upgrade
 from repro.core.hardware import (BRAWNY, RPI3, YOLO_TINY, YOLO_V2, YOLO_V3,
-                                 CameraTier, CloudModel, NetworkModel,
-                                 camera_fps, landmark_interval)
+                                 CloudModel, NetworkModel, camera_fps,
+                                 landmark_interval)
 from repro.core.operators import (OperatorArch, calibrate_thresholds,
-                                  gamma_of, init_operator, score_frames,
-                                  train_operator)
+                                  gamma_of)
 from repro.core.queue import AsyncUploadQueue
 from repro.core.video import FRAME_H, FRAME_W, QUERY_CLASS, Video, corpus
 
@@ -124,10 +123,10 @@ def test_landmark_heatmap_matches_skew(small_video, small_store):
 
 
 def test_landmark_training_set(small_store):
-    i, l, c = lm_mod.training_set(small_store, "bus")
-    assert len(i) == len(l) == len(c) == len(small_store.landmarks)
-    assert set(np.unique(l)) <= {0.0, 1.0}
-    assert (c[l == 0] == 0).all()
+    i, lab, c = lm_mod.training_set(small_store, "bus")
+    assert len(i) == len(lab) == len(c) == len(small_store.landmarks)
+    assert set(np.unique(lab)) <= {0.0, 1.0}
+    assert (c[lab == 0] == 0).all()
 
 
 def test_temporal_density_sums(small_store, small_video):
@@ -363,8 +362,8 @@ def test_operator_train_learns(small_video, small_store):
     from repro.core.training import CloudTrainer, FrameBank
     bank = FrameBank(small_video)
     trainer = CloudTrainer(bank, "car", CloudModel(), train_steps=80)
-    i, l, c = lm_mod.training_set(small_store, "car")
-    trainer.add_samples(i, l, c)
+    i, lab, c = lm_mod.training_set(small_store, "car")
+    trainer.add_samples(i, lab, c)
     fi, fl, fc = flow.propagate(small_video, small_store, "car")
     trainer.add_samples(fi, fl, fc)
     arch = OperatorArch("t", 5, 32, 64, 100)
