@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import csv
 import dataclasses
+import os
+import platform
 import time
 from pathlib import Path
 from typing import Dict, List, Tuple
@@ -97,6 +99,21 @@ class SceneCache:
         return make_env(self.video(name), q, store, bank=self.bank(name),
                         tier=tier, net=net,
                         train_steps=profile.train_steps)
+
+
+def host_meta() -> dict:
+    """Host/device/toolchain identification recorded in every BENCH_*
+    JSON — perf numbers from different machines are not comparable, so
+    every artifact says where it came from."""
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "device": getattr(dev, "device_kind", str(dev)),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+    }
 
 
 def realtime_x(env, delay: float) -> float:

@@ -14,6 +14,12 @@ item is tracing/dispatch overhead eating the Pallas win on small archs
           flushes — the classic scoring-hot-path stall.
   TRC003  non-hashable (list/dict/set) static arguments raise at call
           time, and mutable defaults on static params retrace per call.
+  TRC004  hot-path scorer bodies jitted without buffer donation: the
+          runtime builds each input batch fresh per dispatch (pad +
+          stack), so the buffer is runtime-owned and donatable —
+          ``jax.jit`` on a scorer without ``donate_argnums`` /
+          ``donate_argnames`` doubles peak batch memory on
+          donation-capable backends.
 
 Detection of "jit'd function" covers decorator form (``@jax.jit``,
 ``@partial(jax.jit, ...)``) and wrapping form (``fn = jax.jit(f)`` /
@@ -165,6 +171,68 @@ class HostSyncInJitRule(Rule):
                             f"`{q}(...)` on a traced value inside jit'd "
                             f"`{fn.name}` pulls the array to the host "
                             "mid-trace; use jnp and convert outside")
+
+
+@register
+class ScorerDonationRule(Rule):
+    id = "TRC004"
+    name = "tracing-scorer-donation"
+    invariant = ("hot-path scorer dispatches donate their input batch: "
+                 "OperatorRuntime builds every batch buffer fresh "
+                 "(crop + pad + stack), so it is runtime-owned and XLA "
+                 "may reuse it for the output — a scorer jit without "
+                 "donate_argnums/donate_argnames holds both buffers "
+                 "live and doubles peak batch memory off-CPU")
+    default_paths = ("src/*",)
+
+    # what counts as a hot-path scorer body: the naming convention the
+    # runtime uses for its traced scoring functions
+    SCORER_NAMES = ("scorer", "score_body", "apply_scorer")
+    DONATE_KWARGS = {"donate_argnums", "donate_argnames"}
+
+    def _is_scorer_name(self, name: str) -> bool:
+        return name.lstrip("_") in self.SCORER_NAMES
+
+    def _has_donation(self, call: ast.Call) -> bool:
+        return any(kw.arg in self.DONATE_KWARGS for kw in call.keywords)
+
+    def check(self, mod: ModuleInfo) -> Iterator[Violation]:
+        # decorator form: @jax.jit / @partial(jax.jit, ...) on a scorer
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and self._is_scorer_name(node.name):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and is_jit_call(mod, dec):
+                        if not self._has_donation(dec):
+                            yield self.violation(
+                                mod, dec,
+                                f"scorer `{node.name}` jitted without "
+                                "buffer donation; pass donate_argnums "
+                                "for the runtime-owned input batch")
+                    elif mod.qualname(dec) == "jax.jit":
+                        yield self.violation(
+                            mod, dec,
+                            f"scorer `{node.name}` jitted without buffer "
+                            "donation; use jax.jit(..., donate_argnums="
+                            "...) for the runtime-owned input batch")
+            # wrapping form: jax.jit(scorer, ...) / partial(jax.jit, ...)
+            elif isinstance(node, ast.Call) and is_jit_call(mod, node):
+                args = node.args
+                if mod.qualname(node.func) != "jax.jit":
+                    args = node.args[1:]        # skip partial's jax.jit
+                if not args:
+                    continue
+                wrapped = any(
+                    isinstance(sub, ast.Name) and
+                    self._is_scorer_name(sub.id)
+                    for sub in ast.walk(args[0]))
+                if wrapped and not self._has_donation(node):
+                    yield self.violation(
+                        mod, node,
+                        "jax.jit on a scorer body without buffer "
+                        "donation; the input batch is runtime-owned — "
+                        "pass donate_argnums (gate on backend support "
+                        "if targeting CPU)")
 
 
 @register

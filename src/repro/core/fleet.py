@@ -5,13 +5,16 @@ executor is a single-query discrete-event loop. The stepper protocol
 (``core/stepper``) makes those loops resumable; this module interleaves
 many of them:
 
-  * **Cross-query batched scoring.** Whenever several queries are
-    simultaneously blocked on a ``ScoreDemand``, the scheduler hands the
-    whole set to ``OperatorRuntime.score_demands``, which fuses demands
-    sharing an arch signature into single dispatches against the shared
-    jit cache — fewer, larger, bucket-stable batches (the fleet's
-    dispatch count drops roughly by the group factor versus running the
-    queries sequentially; see ``benchmarks/bench_fleet.py``).
+  * **Cross-query superbatched scoring with score/uplink overlap.**
+    The moment a query blocks on a ``ScoreDemand`` its chunks go to a
+    ``ScoreBatcher`` (``core/runtime``), which issues one stacked
+    ``(group, bucket, …)`` dispatch per ``group_max`` same-(signature,
+    bucket) chunks — eagerly, while the host loop keeps serving other
+    queries' uplink ticks, so device compute overlaps the simulated
+    uplink via JAX async dispatch. Results stay on-device until the
+    no-ticks-pending barrier, where blocked steppers resume in task
+    order. Fewer, larger, shape-stable dispatches (see
+    ``benchmarks/bench_fleet.py``), identical event ordering.
 
   * **Shared-uplink contention.** Each ``UploadTick`` is answered with
     ``seconds * factor`` where ``factor`` is the number of queries
@@ -41,7 +44,8 @@ from repro.core.counting import MaxCountExecutor, SampleCountExecutor
 from repro.core.filtering import TaggingExecutor
 from repro.core.query import Progress, QueryEnv
 from repro.core.ranking import RetrievalExecutor
-from repro.core.runtime import OperatorRuntime, get_runtime
+from repro.core.runtime import (OperatorRuntime, ScoreBatcher, ScoreHandle,
+                                get_runtime)
 from repro.core.stepper import ScoreDemand, UploadTick
 
 
@@ -73,6 +77,7 @@ class _Task:
     gen: object = None            # the stepper
     tick: Optional[UploadTick] = None      # pending, not yet answered
     demand: Optional[ScoreDemand] = None   # pending, not yet answered
+    handle: Optional[ScoreHandle] = None   # in-flight device results
     result: Optional[Progress] = None
     ticks: int = 0
 
@@ -194,19 +199,42 @@ class FleetScheduler:
         else:
             raise TypeError(f"unknown work item from {task.qid}: {item!r}")
 
+    def _advance(self, task: _Task, resp, batcher: ScoreBatcher) -> None:
+        """Resume one stepper and, if it blocks on a ScoreDemand, submit
+        the demand to the batcher *immediately*. The dispatch may go to
+        the device right away (queue at ``group_max``) while the task
+        stays parked until the barrier — eager issue, unchanged
+        event ordering."""
+        self._step(task, resp)
+        if task.demand is not None:
+            task.handle = batcher.submit(
+                task.demand.trained, task.env.bank, task.demand.idxs)
+
     def run(self) -> Dict[str, Progress]:
         """Drive every query to completion: UploadTicks are answered one
         at a time in global *simulated-time* order (so the contention
-        factor sees the same overlaps regardless of submission order),
-        and whenever every live query is blocked on a ScoreDemand the
-        whole set goes to the runtime as one batched round."""
+        factor sees the same overlaps regardless of submission order).
+
+        Scoring overlaps the uplink loop: the moment a stepper blocks on
+        a ``ScoreDemand`` its chunks are submitted to a ``ScoreBatcher``,
+        which issues a fused superbatch dispatch whenever ``group_max``
+        same-(signature, bucket) chunks have accumulated — so the device
+        computes (JAX async dispatch) while the host keeps serving
+        simulated uplink ticks for the other queries. When no transfers
+        are in flight, the remaining partial groups flush and every
+        blocked stepper resumes — in task order, with results pulled
+        from its on-device handle. Resumption points and ordering are
+        exactly the pre-overlap barrier rounds', and every dispatch
+        layout is bit-identical to single-demand scoring, so fleet runs
+        stay bit-equivalent to standalone ones."""
         if not self.tasks:
             return {}
         rt = self.runtime
         calls0, frames0 = rt.calls, rt.frames_scored
+        batcher = ScoreBatcher(rt, group_max=self.group_max)
         rounds = 0
         for task in self.tasks:
-            self._step(task, None)
+            self._advance(task, None, batcher)
         while True:
             # earliest pending transfer across the fleet first
             ticking = [t for t in self.tasks if t.tick is not None]
@@ -214,26 +242,26 @@ class FleetScheduler:
                 task = min(ticking, key=lambda t: (t.tick.at, t.order))
                 item = task.tick
                 task.ticks += 1
-                self._step(task, item.seconds *
-                           self._uplink_factor(task, item.at))
+                self._advance(task, item.seconds *
+                              self._uplink_factor(task, item.at), batcher)
                 continue
-            # no transfers in flight: every live query sits at a score
-            # barrier — one cross-query batched dispatch round
+            # no transfers in flight (the no-ticks-pending watermark):
+            # flush partial groups, then resume every score-blocked
+            # stepper in task order from its on-device results
             blocked = [t for t in self.tasks if t.demand is not None]
             if not blocked:
                 break
             rounds += 1
-            outs = rt.score_demands(
-                [(t.demand.trained, t.env.bank, t.demand.idxs)
-                 for t in blocked],
-                group_max=self.group_max)
-            for task, out in zip(blocked, outs):
-                self._step(task, out)
+            batcher.flush()
+            for task in blocked:
+                handle, task.handle = task.handle, None
+                self._advance(task, handle.result(), batcher)
         self.stats = {
             "queries": len(self.tasks),
             "cameras": len({t.camera for t in self.tasks}),
             "score_rounds": rounds,
             "dispatches": rt.calls - calls0,
+            "eager_dispatches": batcher.eager_dispatches,
             "frames_scored": rt.frames_scored - frames0,
             "upload_ticks": sum(t.ticks for t in self.tasks),
         }

@@ -3,26 +3,40 @@
 Every query executor used to carry its own 1024-chunk ``score_frames``
 loop over the unjitted jnp apply, retracing the conv stack on every
 call and never touching the Pallas ``kernels/conv_scorer`` kernel. This
-module centralizes scoring:
+module centralizes scoring behind three dispatch layers (see
+``docs/ARCHITECTURE.md`` "Dispatch layers"):
 
-  * one jit-compiled apply function per *arch signature*
-    ``(conv_layers, channels, dense, input_size)`` — operators that
-    share a signature (e.g. region variants of the same architecture)
-    share the compiled function;
-  * batches are bucketed to power-of-two sizes (min 64, max ``chunk``)
-    and zero-padded, so compilation sees a handful of stable shapes
-    instead of one per call;
-  * the conv stack dispatches through the Pallas
-    ``kernels/conv_scorer`` backend on TPU hosts with the jnp reference
-    as the CPU fallback (``kernels/ops.conv_scorer_fn``).
+  * **lean small-shape dispatch** — below ``small_flops`` useful FLOPs
+    per dispatch, padding overhead rivals the compute itself, so the
+    batch skips power-of-two bucketing entirely: a per-(signature,
+    quantized-shape) jit with the input buffer donated. This is the
+    fix for the sub-1x small-arch regression the ROADMAP flagged.
+  * **bucketed single dispatch** — larger batches are zero-padded to
+    power-of-two buckets (min 64, max ``chunk``) so compilation sees a
+    handful of stable shapes instead of one per call.
+  * **stacked superbatch dispatch** — ``ScoreBatcher`` fuses up to
+    ``group_max`` same-(signature, bucket) chunks from *different*
+    queries into one ``(group, bucket, …)`` dispatch whose scorer body
+    maps the single-chunk computation over stacked per-query params
+    (``jax.vmap`` on Pallas/TPU; a statically unrolled map on CPU,
+    where XLA's grouped convolutions are slow). One trace per
+    (signature, group size, bucket) for the entire fleet — the old
+    tuple-of-args grouping retraced per distinct shape *tuple*, which
+    is combinatorial in the demand mix.
 
-Executors reach it through ``QuerySession.score``; the cloud trainer's
-validation scoring goes through ``get_runtime().score_crops``; the
-``FleetScheduler`` hands many queries' concurrent demands to
-``score_demands``, which fuses same-arch-signature demands into single
-dispatches (fewer, larger, bucket-stable batches). The process-global
-runtime means a query fleet sharing one host also shares one
-compilation cache.
+All three layers run the identical ``_scorer_body`` math and padding
+rows cannot perturb real rows, so every path is bit-identical to every
+other (property-tested in ``tests/test_runtime.py``); schedulers are
+free to choose dispatch layout purely for performance.
+
+Executors reach the runtime through ``QuerySession.score``; the cloud
+trainer's validation scoring goes through ``get_runtime().score_crops``;
+the ``FleetScheduler`` feeds a ``ScoreBatcher``, which issues fused
+dispatches eagerly as demands accumulate and keeps results on-device
+(``ScoreHandle``) until the scheduler consumes them — JAX async
+dispatch then overlaps device compute with the host-side uplink
+simulation. The process-global runtime means a query fleet sharing one
+host also shares one compilation cache.
 """
 from __future__ import annotations
 
@@ -37,7 +51,16 @@ from repro.kernels import ops as kops
 ArchSig = Tuple[int, int, int, int]
 
 CHUNK = 1024          # frames per dispatch (bounds crop-cache pressure)
-MIN_BUCKET = 64       # smallest padded batch shape
+MIN_BUCKET = 64       # smallest padded batch shape (bucketed path)
+# Useful FLOPs per dispatch below which the lean small-shape path runs.
+# Calibrate for a host with ``benchmarks.roofline.calibrate_small_flops``
+# (the default corresponds to a few ms of compute on a laptop-class
+# core, where padding to a power of two costs more than it saves).
+SMALL_FLOPS = 3e8
+# Small-shape batches are quantized up to a multiple of this (instead of
+# a power of two) purely to bound the compiled-shape vocabulary; 1
+# disables quantization (exact shapes).
+SMALL_QUANT = 32
 
 
 def arch_signature(arch) -> ArchSig:
@@ -46,51 +69,86 @@ def arch_signature(arch) -> ArchSig:
     return (arch.conv_layers, arch.channels, arch.dense, arch.input_size)
 
 
+def sig_flops(sig: ArchSig) -> float:
+    """Per-frame inference FLOPs of a signature — the cost model of
+    ``OperatorArch.flops`` restated over the signature fields (region
+    variants share it), used to pick a dispatch layer per batch."""
+    layers, channels, dense, size = sig
+    s, c_in, total = size, 3, 0.0
+    for _ in range(layers):
+        total += 2.0 * s * s * channels * 9 * c_in
+        c_in = channels
+        s = max(1, (s + 1) // 2)
+    total += 2.0 * (s * s * c_in) * dense + 2.0 * dense * 2
+    return total
+
+
 class OperatorRuntime:
     """Batched operator scoring with a per-arch jit cache.
 
     ``backend``: "pallas" | "jnp" | None (auto: pallas iff running on
     TPU). ``interpret`` runs Pallas kernels in interpreter mode (tests).
+    ``small_flops``/``small_quant`` tune the small-shape fast path;
+    ``superbatch`` picks the fused-dispatch style ("vmap" | "unroll",
+    auto per backend). ``calls`` counts **jit dispatches** on every
+    path (one fused superbatch = one call), so dispatch numbers are
+    comparable between ``score_crops`` and ``ScoreBatcher`` scoring.
     """
 
     def __init__(self, *, backend: Optional[str] = None,
                  interpret: bool = False, chunk: int = CHUNK,
-                 min_bucket: int = MIN_BUCKET):
+                 min_bucket: int = MIN_BUCKET,
+                 small_flops: float = SMALL_FLOPS,
+                 small_quant: int = SMALL_QUANT,
+                 superbatch: Optional[str] = None):
         self.backend = backend or kops.default_conv_backend()
         if self.backend not in ("pallas", "jnp"):
             raise ValueError(f"unknown conv backend: {self.backend!r}")
         self.interpret = interpret
         self.chunk = int(chunk)
         self.min_bucket = int(min_bucket)
-        self._apply: Dict[ArchSig, Callable] = {}
-        self._apply_group: Dict[ArchSig, Callable] = {}
+        self.small_flops = float(small_flops)
+        self.small_quant = max(int(small_quant), 1)
+        # XLA grouped convolutions (what vmap-over-params lowers to) are
+        # fast on TPU but markedly slower than an unrolled member-wise
+        # map on the CPU backend — pick per backend, overridable.
+        self.superbatch = superbatch or (
+            "vmap" if self.backend == "pallas" else "unroll")
+        if self.superbatch not in ("vmap", "unroll"):
+            raise ValueError(f"unknown superbatch style: {self.superbatch!r}")
+        # input batches are built fresh per dispatch, so they are safe
+        # to donate; XLA only honors donation off-CPU (kops helper)
+        self._donate = (1,) if kops.donation_supported() else ()
+        self._apply: Dict[ArchSig, Callable] = {}                # bucketed
+        self._small: Dict[Tuple[ArchSig, int], Callable] = {}    # lean
+        self._super: Dict[ArchSig, Callable] = {}                # fused
         self._traces: Dict[ArchSig, int] = {}
         self._group_traces: Dict[ArchSig, int] = {}
         # (sig, shape-key) -> trace count; the invariant TraceGuard
-        # asserts is that no key ever reaches 2 (shapes are bucketed, so
-        # distinct buckets tracing once each is expected and fine)
+        # asserts is that no key ever reaches 2 (shapes are bucketed/
+        # quantized, so distinct keys tracing once each is expected)
         self._shape_traces: Dict[Tuple[ArchSig, tuple], int] = {}
+        # sig -> dispatch-shape vocabulary actually used (bench reports
+        # assert traces_per_arch <= len(vocabulary))
+        self._shape_vocab: Dict[ArchSig, set] = {}
         self.calls = 0
-        self.frames_scored = 0
+        self.frames_scored = 0       # real (caller-requested) frames
+        self.frames_padded = 0       # zero rows added for shape stability
+        self.small_calls = 0
+        self.bucketed_calls = 0
+        self.super_calls = 0
 
     # -- compilation cache ---------------------------------------------------
 
     def apply_fn(self, arch) -> Callable:
-        """The jit-compiled ``(params, x) -> (probs, counts)`` for an
-        arch — built once per signature per runtime."""
-        return self._apply_sig(arch_signature(arch))
-
-    def _apply_sig(self, sig: ArchSig) -> Callable:
-        fn = self._apply.get(sig)
-        if fn is None:
-            fn = self._build(sig)
-            self._apply[sig] = fn
-        return fn
+        """The bucketed-path jit-compiled ``(params, x) -> (probs,
+        counts)`` for an arch — built once per signature per runtime."""
+        return self._bucket_fn(arch_signature(arch))
 
     def _scorer_body(self, sig: ArchSig) -> Callable:
         """The per-batch ``(params, x) -> (probs, counts)`` computation —
-        shared verbatim by the single-demand and grouped dispatch paths,
-        so grouping cannot change the traced math."""
+        shared verbatim by all three dispatch layers, so dispatch layout
+        cannot change the traced math."""
         conv = kops.conv_scorer_fn(self.backend, interpret=self.interpret)
 
         def scorer(params, x):
@@ -115,34 +173,63 @@ class OperatorRuntime:
         key = (sig, shape_key)
         self._shape_traces[key] = self._shape_traces.get(key, 0) + 1
 
-    def _build(self, sig: ArchSig) -> Callable:
-        body = self._scorer_body(sig)
-
-        def scorer(params, x):
-            # executes at trace time only: counts compilations per sig
-            self._record_trace(sig, tuple(x.shape))
-            return body(params, x)
-
-        return jax.jit(scorer)
-
-    def _group_fn(self, sig: ArchSig) -> Callable:
-        """The fused multi-demand dispatch for one arch signature: a
-        jit-compiled function over *tuples* of (params, x) whose traced
-        body is N independent copies of the single-demand scorer. One
-        call = one dispatch covering demands from several queries; jit
-        retraces per distinct shape tuple (shapes are bucketed, so the
-        tuple vocabulary stays small)."""
-        fn = self._apply_group.get(sig)
+    def _bucket_fn(self, sig: ArchSig) -> Callable:
+        fn = self._apply.get(sig)
         if fn is None:
             body = self._scorer_body(sig)
 
-            def grouped(params_seq, x_seq):
-                self._record_trace(
-                    sig, tuple(tuple(x.shape) for x in x_seq), grouped=True)
-                return tuple(body(p, x) for p, x in zip(params_seq, x_seq))
+            def scorer(params, x):
+                # executes at trace time only: counts compilations
+                self._record_trace(sig, tuple(x.shape))
+                return body(params, x)
 
-            fn = jax.jit(grouped)
-            self._apply_group[sig] = fn
+            fn = jax.jit(scorer, donate_argnums=self._donate)
+            self._apply[sig] = fn
+        return fn
+
+    def _small_fn(self, sig: ArchSig, n: int) -> Callable:
+        """The lean small-shape dispatch: no bucketing, one compiled
+        function per (signature, quantized batch size), input donated."""
+        key = (sig, n)
+        fn = self._small.get(key)
+        if fn is None:
+            body = self._scorer_body(sig)
+
+            def scorer(params, x):
+                self._record_trace(sig, tuple(x.shape))
+                return body(params, x)
+
+            fn = jax.jit(scorer, donate_argnums=self._donate)
+            self._small[key] = fn
+        return fn
+
+    def _super_fn(self, sig: ArchSig) -> Callable:
+        """The stacked superbatch dispatch for one arch signature: the
+        single-chunk scorer body mapped over stacked per-query params
+        and a ``(group, bucket, …)`` input. ``jax.vmap`` lowers the
+        conv stack to grouped convolutions (fast on TPU); the "unroll"
+        style emits one body per group member instead (CPU). Either
+        way: one dispatch covering chunks from several queries, one
+        trace per (signature, group size, bucket)."""
+        fn = self._super.get(sig)
+        if fn is None:
+            body = self._scorer_body(sig)
+            if self.superbatch == "vmap":
+                mapped = jax.vmap(body)
+            else:
+                def mapped(params, x):
+                    outs = [body(jax.tree_util.tree_map(
+                        lambda a, g=g: a[g], params), x[g])
+                        for g in range(x.shape[0])]
+                    return (jnp.stack([p for p, _ in outs]),
+                            jnp.stack([c for _, c in outs]))
+
+            def scorer(params, x):
+                self._record_trace(sig, tuple(x.shape), grouped=True)
+                return mapped(params, x)
+
+            fn = jax.jit(scorer, donate_argnums=self._donate)
+            self._super[sig] = fn
         return fn
 
     def trace_count(self, arch=None) -> int:
@@ -152,9 +239,27 @@ class OperatorRuntime:
 
     @property
     def n_compiled(self) -> int:
-        return len(self._apply)
+        return len(self._apply) + len(self._small) + len(self._super)
 
-    # -- scoring -------------------------------------------------------------
+    def shape_vocab(self) -> Dict[str, List[tuple]]:
+        """sig-string -> sorted dispatch shapes used so far. Every shape
+        traces at most once, so ``traces_per_arch[s] <=
+        len(shape_vocab()[s])`` — the bound bench reports record."""
+        return {sig_str(sig): sorted(shapes)
+                for sig, shapes in self._shape_vocab.items()}
+
+    def dispatch_stats(self) -> Dict[str, int]:
+        """Per-path dispatch accounting for bench output."""
+        return {
+            "calls": self.calls,
+            "small_calls": self.small_calls,
+            "bucketed_calls": self.bucketed_calls,
+            "super_calls": self.super_calls,
+            "frames_scored": self.frames_scored,
+            "frames_padded": self.frames_padded,
+        }
+
+    # -- dispatch layers -----------------------------------------------------
 
     def _bucket(self, n: int) -> int:
         b = self.min_bucket
@@ -162,26 +267,78 @@ class OperatorRuntime:
             b <<= 1
         return min(b, self.chunk)
 
+    def is_small(self, sig: ArchSig, n: int) -> bool:
+        """Does a batch of ``n`` frames take the lean small-shape path?
+
+        Judged on the batch's *padded* (quantized) size, not ``n``:
+        that makes the small and bucketed dispatch-shape vocabularies
+        provably disjoint, so no (sig, shape) jit-cache key is ever
+        reachable from both layers and each shape traces exactly once.
+        (A shape S dispatched bucketed implies some non-small m with
+        quantize(m) <= bucket(m) = S, hence S*flops >= small_flops; a
+        small dispatch at S requires S*flops < small_flops.) Monotone
+        in ``n`` per signature."""
+        return self._quantize_small(n) * sig_flops(sig) < self.small_flops
+
+    def _quantize_small(self, n: int) -> int:
+        q = self.small_quant
+        return max(1, ((n + q - 1) // q) * q) if n else 0
+
+    def _pad_rows(self, x: np.ndarray, to: int) -> np.ndarray:
+        m = x.shape[0]
+        if m >= to:
+            return x
+        self.frames_padded += to - m
+        return np.concatenate(
+            [x, np.zeros((to - m,) + x.shape[1:], np.float32)])
+
+    def _dispatch(self, sig: ArchSig, fn: Callable, params, x,
+                  *, kind: str):
+        """Every jit dispatch funnels through here: counts calls (the
+        unit ``calls`` means on every path) and records the shape
+        vocabulary. Returns on-device arrays."""
+        self.calls += 1
+        if kind == "small":
+            self.small_calls += 1
+        elif kind == "super":
+            self.super_calls += 1
+        else:
+            self.bucketed_calls += 1
+        self._shape_vocab.setdefault(sig, set()).add(tuple(x.shape))
+        return fn(params, x)
+
+    def _dispatch_chunk(self, sig: ArchSig, params, x: np.ndarray):
+        """One chunk through the lean or bucketed layer (padding as the
+        layer dictates); returns on-device (probs, counts)."""
+        m = x.shape[0]
+        if self.is_small(sig, m):
+            n = self._quantize_small(m)
+            return self._dispatch(
+                sig, self._small_fn(sig, n), params,
+                jnp.asarray(self._pad_rows(x, n)), kind="small")
+        b = self._bucket(m)
+        return self._dispatch(
+            sig, self._bucket_fn(sig), params,
+            jnp.asarray(self._pad_rows(x, b)), kind="bucketed")
+
+    # -- scoring -------------------------------------------------------------
+
     def score_crops(self, params: dict, arch, crops
                     ) -> Tuple[np.ndarray, np.ndarray]:
-        """Score pre-cropped inputs -> (presence_prob, count) as numpy."""
+        """Score pre-cropped inputs -> (presence_prob, count) as numpy.
+        ``calls`` advances once per jit dispatch (= per chunk)."""
         x = np.asarray(crops, np.float32)
         n = x.shape[0]
         probs = np.empty(n, np.float64)
         counts = np.empty(n, np.float64)
         if n == 0:
             return probs, counts
-        fn = self.apply_fn(arch)
-        self.calls += 1
+        sig = arch_signature(arch)
         self.frames_scored += n
         for i in range(0, n, self.chunk):
             xb = x[i:i + self.chunk]
             m = xb.shape[0]
-            b = self._bucket(m)
-            if m < b:
-                xb = np.concatenate(
-                    [xb, np.zeros((b - m,) + xb.shape[1:], np.float32)])
-            p, c = fn(params, jnp.asarray(xb))
+            p, c = self._dispatch_chunk(sig, params, xb)
             probs[i:i + m] = np.asarray(p, np.float64)[:m]
             counts[i:i + m] = np.asarray(c, np.float64)[:m]
         return probs, counts
@@ -189,17 +346,10 @@ class OperatorRuntime:
     def score(self, trained, bank, idxs) -> Tuple[np.ndarray, np.ndarray]:
         """Score frame indices of a ``TrainedOp`` via a FrameBank,
         cropping chunk-by-chunk (keeps peak memory at one chunk)."""
-        arch = trained.arch
-        idxs = np.asarray(idxs, np.int64)
-        probs = np.empty(len(idxs), np.float64)
-        counts = np.empty(len(idxs), np.float64)
-        for i in range(0, len(idxs), self.chunk):
-            sel = idxs[i:i + self.chunk]
-            crops = bank.crops(sel, arch.region, arch.input_size)
-            p, c = self.score_crops(trained.params, arch, crops)
-            probs[i:i + len(sel)] = p
-            counts[i:i + len(sel)] = c
-        return probs, counts
+        batcher = ScoreBatcher(self, group_max=1)
+        handle = batcher.submit(trained, bank, idxs)
+        batcher.flush()
+        return handle.result()
 
     # -- cross-query demand aggregation ---------------------------------------
 
@@ -209,67 +359,160 @@ class OperatorRuntime:
 
         ``demands``: list of ``(trained, bank, idxs)`` — one per query
         (different queries have different params and FrameBanks but
-        often share an arch *signature*). Each demand is cut into the
-        same bucketed chunks the single-query ``score`` path would use;
-        chunks sharing a signature are then fused — up to ``group_max``
-        per dispatch — through ``_group_fn``, so N queries cost ~N/
-        ``group_max`` dispatches against one shared jit cache instead of
-        N. Per-chunk shapes, padding, and traced math are identical to
-        the single-query path, which is what keeps fleet scores
-        bit-identical to standalone runs (asserted in
-        ``tests/test_fleet.py``).
-
-        Returns ``[(probs, counts)]`` aligned with ``demands``.
+        often share an arch *signature*). Batch facade over
+        ``ScoreBatcher``: submit everything, flush, resolve. Returns
+        ``[(probs, counts)]`` aligned with ``demands``.
         """
-        results: List[Tuple[np.ndarray, np.ndarray]] = []
-        by_sig: Dict[ArchSig, List[tuple]] = {}
-        for di, (trained, bank, idxs) in enumerate(demands):
-            idxs = np.asarray(idxs, np.int64)
-            results.append((np.empty(len(idxs), np.float64),
-                            np.empty(len(idxs), np.float64)))
-            arch = trained.arch
-            sig = arch_signature(arch)
-            for i in range(0, len(idxs), self.chunk):
-                sel = idxs[i:i + self.chunk]
-                x = np.asarray(bank.crops(sel, arch.region, arch.input_size),
-                               np.float32)
-                m = x.shape[0]
-                if m == 0:
-                    continue
-                b = self._bucket(m)
-                if m < b:
-                    x = np.concatenate(
-                        [x, np.zeros((b - m,) + x.shape[1:], np.float32)])
-                by_sig.setdefault(sig, []).append(
-                    (di, i, m, trained.params, x))
+        batcher = ScoreBatcher(self, group_max=group_max)
+        handles = [batcher.submit(trained, bank, idxs)
+                   for trained, bank, idxs in demands]
+        batcher.flush()
+        return [h.result() for h in handles]
 
-        def scatter(chunk, p, c):
-            di, off, m, _, _ = chunk
-            probs, counts = results[di]
-            probs[off:off + m] = np.asarray(p, np.float64)[:m]
-            counts[off:off + m] = np.asarray(c, np.float64)[:m]
 
-        for sig, chunks in by_sig.items():
-            # canonical dispatch order: shapes sorted large-first BEFORE
-            # cutting group_max windows, so permutations of the same
-            # demand multiset hit the same compiled shape tuples
-            # (scatter is index-based, so order is free to choose)
-            chunks.sort(key=lambda it: (-it[4].shape[0], it[0], it[1]))
-            for k in range(0, len(chunks), group_max):
-                part = chunks[k:k + group_max]
-                self.calls += 1
-                self.frames_scored += sum(it[2] for it in part)
-                if len(part) == 1:
-                    di, off, m, params, x = part[0]
-                    p, c = self._apply_sig(sig)(params, jnp.asarray(x))
-                    scatter(part[0], p, c)
-                    continue
-                outs = self._group_fn(sig)(
-                    tuple(it[3] for it in part),
-                    tuple(jnp.asarray(it[4]) for it in part))
-                for chunk, (p, c) in zip(part, outs):
-                    scatter(chunk, p, c)
-        return results
+# -- fused dispatch + on-device results ---------------------------------------
+
+
+class _Out:
+    """One dispatch's on-device output; converted to float64 numpy once,
+    on first consumption — until then results stay on-device, which is
+    what lets JAX async dispatch overlap scoring with host-side work."""
+
+    __slots__ = ("p", "c", "_np")
+
+    def __init__(self, p, c):
+        self.p, self.c = p, c
+        self._np: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    def to_np(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._np is None:
+            self._np = (np.asarray(self.p, np.float64),
+                        np.asarray(self.c, np.float64))
+            self.p = self.c = None          # free the device buffers
+        return self._np
+
+
+class ScoreHandle:
+    """Future-like per-demand result. ``result()`` blocks on (and
+    converts) the device arrays; everything before that is async."""
+
+    def __init__(self, n: int):
+        self._probs = np.empty(n, np.float64)
+        self._counts = np.empty(n, np.float64)
+        self._parts: List[Tuple[int, int, _Out, Optional[int]]] = []
+        self._chunks = 0          # chunks submitted, incl. undispatched
+        self._done: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    @property
+    def dispatched(self) -> bool:
+        """All chunks issued to the device (results may still be in
+        flight — that is the point)."""
+        return len(self._parts) == self._chunks
+
+    def _add_part(self, off: int, m: int, out: _Out,
+                  row: Optional[int]) -> None:
+        self._parts.append((off, m, out, row))
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(probs, counts) float64 numpy, one entry per index."""
+        if self._done is None:
+            if not self.dispatched:
+                raise RuntimeError(
+                    "ScoreHandle.result() before all chunks dispatched; "
+                    "flush the ScoreBatcher first")
+            for off, m, out, row in self._parts:
+                p, c = out.to_np()
+                if row is not None:
+                    p, c = p[row], c[row]
+                self._probs[off:off + m] = p[:m]
+                self._counts[off:off + m] = c[:m]
+            self._parts = []
+            self._done = (self._probs, self._counts)
+        return self._done
+
+
+class ScoreBatcher:
+    """Accumulates score demands and issues fused dispatches eagerly.
+
+    ``submit`` cuts a demand into chunks immediately (host-side crop +
+    pad), sends small chunks straight through the lean layer, and
+    queues bucketed chunks per (signature, bucket); a queue reaching
+    ``group_max`` dispatches eagerly as one stacked superbatch — the
+    scheduler's high-watermark. ``flush`` dispatches the partial
+    remainder (singles go through the bucketed layer so no new
+    superbatch shape is traced for a leftover group size of 1).
+
+    Dispatches return immediately with on-device results
+    (:class:`ScoreHandle`); callers resolve them as late as possible,
+    letting device compute overlap host work in between. Every layout
+    this class may choose is bit-identical to single-demand scoring, so
+    grouping decisions are pure performance tuning.
+    """
+
+    def __init__(self, runtime: OperatorRuntime, *, group_max: int = 8):
+        self.rt = runtime
+        self.group_max = max(int(group_max), 1)
+        self._queues: Dict[Tuple[ArchSig, int], List[tuple]] = {}
+        self.eager_dispatches = 0    # full groups issued before flush()
+
+    def pending(self) -> int:
+        """Chunks queued but not yet dispatched."""
+        return sum(len(q) for q in self._queues.values())
+
+    def submit(self, trained, bank, idxs) -> ScoreHandle:
+        """Enqueue one demand; returns its handle (resolve after the
+        batcher is flushed)."""
+        rt = self.rt
+        arch = trained.arch
+        sig = arch_signature(arch)
+        idxs = np.asarray(idxs, np.int64)
+        handle = ScoreHandle(len(idxs))
+        if len(idxs) == 0:
+            return handle
+        rt.frames_scored += len(idxs)
+        for i in range(0, len(idxs), rt.chunk):
+            sel = idxs[i:i + rt.chunk]
+            x = np.asarray(bank.crops(sel, arch.region, arch.input_size),
+                           np.float32)
+            m = x.shape[0]
+            handle._chunks += 1
+            if self.group_max == 1 or rt.is_small(sig, m):
+                p, c = rt._dispatch_chunk(sig, trained.params, x)
+                handle._add_part(i, m, _Out(p, c), None)
+                continue
+            b = rt._bucket(m)
+            q = self._queues.setdefault((sig, b), [])
+            q.append((handle, i, m, trained.params, rt._pad_rows(x, b)))
+            if len(q) >= self.group_max:
+                self._dispatch_group(sig, q)
+                self._queues[(sig, b)] = []
+                self.eager_dispatches += 1
+        return handle
+
+    def flush(self) -> None:
+        """Dispatch every queued partial group (the no-ticks-pending
+        watermark); afterwards all submitted handles are resolvable."""
+        for (sig, _b), q in self._queues.items():
+            if q:
+                self._dispatch_group(sig, q)
+        self._queues.clear()
+
+    def _dispatch_group(self, sig: ArchSig, group: List[tuple]) -> None:
+        rt = self.rt
+        if len(group) == 1:
+            handle, off, m, params, x = group[0]
+            p, c = rt._dispatch(sig, rt._bucket_fn(sig), params,
+                                jnp.asarray(x), kind="bucketed")
+            handle._add_part(off, m, _Out(p, c), None)
+            return
+        stacked = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *[g[3] for g in group])
+        xs = jnp.asarray(np.stack([g[4] for g in group]))
+        ps, cs = rt._dispatch(sig, rt._super_fn(sig), stacked, xs,
+                              kind="super")
+        out = _Out(ps, cs)
+        for row, (handle, off, m, _params, _x) in enumerate(group):
+            handle._add_part(off, m, out, row)
 
 
 # -- trace accounting ---------------------------------------------------------
@@ -289,12 +532,13 @@ class TraceGuard:
     over a code region.
 
     The runtime's whole performance story is the compilation cache:
-    each arch signature compiles once per bucketed batch shape and every
-    later call is a cache hit. A *retrace* — the same (signature, shape)
-    traced twice — means something destroyed cache keys (params dtype
-    drift, a rebuilt jit wrapper, an unbucketed shape) and silently
-    re-pays compile time per call; exactly the tracing/dispatch overhead
-    flagged in the ROADMAP. Usage::
+    each arch signature compiles once per dispatch shape (quantized
+    small shape, power-of-two bucket, or (group, bucket) superbatch)
+    and every later call is a cache hit. A *retrace* — the same
+    (signature, shape) traced twice — means something destroyed cache
+    keys (params dtype drift, a rebuilt jit wrapper, an unbucketed
+    shape) and silently re-pays compile time per call; exactly the
+    tracing/dispatch overhead flagged in the ROADMAP. Usage::
 
         with TraceGuard(runtime) as guard:
             ... score ...
@@ -303,7 +547,7 @@ class TraceGuard:
 
     ``check_on_exit=False`` turns the exit check off for callers that
     only want the accounting (benchmarks recording traces_per_arch).
-    Static-analysis counterpart: rules TRC001-003 in ``repro.analysis``.
+    Static-analysis counterpart: rules TRC001-004 in ``repro.analysis``.
     """
 
     def __init__(self, runtime: Optional[OperatorRuntime] = None,

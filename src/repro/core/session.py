@@ -167,5 +167,12 @@ class QuerySession:
 
     def score(self, trained: TrainedOp, idxs
               ) -> Tuple[np.ndarray, np.ndarray]:
-        """Batched (presence_prob, count) over frame indices."""
+        """Batched (presence_prob, count) over frame indices.
+
+        Single-demand scoring through the runtime's adaptive dispatch
+        layers (lean small-shape below the flops threshold, bucketed
+        above it) — bit-identical to the fleet's superbatched path, so
+        a query scored here and the same query scored under a
+        ``FleetScheduler`` produce the same Progress (see
+        docs/ARCHITECTURE.md "Dispatch layers")."""
         return self.runtime.score(trained, self.env.bank, idxs)

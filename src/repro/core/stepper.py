@@ -7,9 +7,15 @@ receives the answer from ``send()``:
 
   ``ScoreDemand(trained, idxs)``  -> responds ``(probs, counts)``
       operator inference over frame indices.  Standalone drivers answer
-      through ``QuerySession.score``; the ``FleetScheduler`` aggregates
-      demands from many concurrent queries into fewer, larger
-      ``OperatorRuntime`` dispatches (``score_demands``).
+      through ``QuerySession.score``; the ``FleetScheduler`` feeds a
+      ``ScoreBatcher`` that fuses chunks from many concurrent queries
+      into stacked superbatch dispatches issued eagerly while the tick
+      loop runs, deferring results on-device (``ScoreHandle``) until
+      the stepper resumes.  The protocol contract is that *any* driver
+      answers with arrays bit-identical to single-demand scoring —
+      every ``OperatorRuntime`` dispatch layer guarantees this, so
+      steppers never observe how their scoring was batched or when it
+      was dispatched.
 
   ``UploadTick(seconds, nbytes)`` -> responds ``float`` (actual seconds)
       one uplink transfer.  ``seconds`` is the *uncontended* duration,

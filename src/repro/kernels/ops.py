@@ -77,6 +77,13 @@ def default_conv_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
+def donation_supported() -> bool:
+    """Whether ``donate_argnums`` buffer donation is honored on this
+    host. XLA:CPU ignores donation and warns per dispatch, so the
+    scoring runtime only donates its input buffers off-CPU."""
+    return jax.default_backend() != "cpu"
+
+
 def conv_scorer_fn(backend: Optional[str] = None, *, stride: int = 2,
                    interpret: bool = False) -> Callable:
     """Resolve the conv-scorer backend to a concrete callable.

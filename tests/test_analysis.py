@@ -112,6 +112,16 @@ FIXTURES = [
      "import jax\n\ndef g(x, dims):\n    return x\n\n"
      "gj = jax.jit(g, static_argnums=(1,))\n\n"
      "def h(x):\n    return gj(x, (1, 2))\n"),
+    ("TRC004",  # scorer body jitted without donating the input batch
+     "import jax\n\ndef scorer(params, x):\n    return x\n\n"
+     "fn = jax.jit(scorer)\n",
+     "import jax\n\ndef scorer(params, x):\n    return x\n\n"
+     "fn = jax.jit(scorer, donate_argnums=(1,))\n"),
+    ("TRC004",  # decorator form; donate_argnames also satisfies it
+     "import jax\n\n@jax.jit\ndef scorer(params, x):\n    return x\n",
+     "import jax\nimport functools\n\n"
+     "@functools.partial(jax.jit, donate_argnames=('x',))\n"
+     "def scorer(params, x):\n    return x\n"),
     ("GEN001",
      "import os\n\nVALUE = 1\n",
      "import os\n\nVALUE = os.sep\n"),

@@ -1,0 +1,123 @@
+"""Perf-invariant smoke suite (the CI ``perf-smoke`` job).
+
+Wall-clock perf claims live in the BENCH_*.json artifacts and cannot be
+asserted in CI without flake; what CI *can* pin is the structure those
+claims rest on. This module runs a tiny fleet on CPU and asserts the
+dispatch-path invariants — dispatch counts and accounting, trace counts
+under ``TraceGuard``, and fleet-vs-standalone bit-equivalence with
+score/uplink overlap enabled — so a regression in the dispatch engine
+fails CI deterministically, with no timing involved.
+"""
+import jax
+import numpy as np
+
+from repro.core import landmarks as lm_mod
+from repro.core.fleet import FleetScheduler, make_executor
+from repro.core.hardware import YOLO_V3
+from repro.core.query import Query, make_env
+from repro.core.runtime import (OperatorRuntime, TraceGuard, set_runtime,
+                                sig_flops)
+from repro.core.training import FrameBank
+from repro.core.video import QUERY_CLASS, Video, corpus
+
+# tiny-but-mixed: two scoring kinds sharing a camera + one
+# upload-only kind, CI-scale video span
+SMOKE = [("JacksonH", "retrieval", {"max_passes": 2}),
+         ("JacksonH", "count_max", {"max_passes": 2}),
+         ("Banff", "count_avg", {})]
+
+
+def _world():
+    videos = {n: Video(corpus(hours=0.1)[n]) for n in ("JacksonH", "Banff")}
+    stores = {n: lm_mod.build_landmarks(v, 30, YOLO_V3)
+              for n, v in videos.items()}
+    banks = {n: FrameBank(v) for n, v in videos.items()}
+
+    def make(cam, kind):
+        env = make_env(videos[cam], Query(kind, QUERY_CLASS[cam]),
+                       stores[cam], bank=banks[cam], train_steps=20)
+        return make_executor(env, full_family=False)
+
+    return make
+
+
+def test_perf_smoke_dispatch_traces_and_bit_equivalence():
+    make = _world()
+
+    # standalone runs (the contract side)
+    rt_solo = OperatorRuntime(backend="jnp")
+    prev = set_runtime(rt_solo)
+    try:
+        solo = [make(cam, kind).run(**kw) for cam, kind, kw in SMOKE]
+    finally:
+        set_runtime(prev)
+    assert rt_solo.calls > 0
+
+    # fleet run with overlap enabled, under the retrace guard
+    rt = OperatorRuntime(backend="jnp")
+    prev = set_runtime(rt)
+    try:
+        sched = FleetScheduler(contended=False)
+        for i, (cam, kind, kw) in enumerate(SMOKE):
+            sched.add(f"s{i}", cam, make(cam, kind), **kw)
+        with TraceGuard(rt) as guard:
+            fleet = sched.run()
+    finally:
+        set_runtime(prev)
+
+    # bit-equivalence: overlap + superbatching change wall-clock only
+    for i, standalone in enumerate(solo):
+        interleaved = fleet[f"s{i}"]
+        assert interleaved.points == standalone.points
+        assert interleaved.bytes_up == standalone.bytes_up
+        assert interleaved.done_t == standalone.done_t
+        assert interleaved.op_switches == standalone.op_switches
+
+    # dispatch accounting: stats line up with the runtime's counters,
+    # per-path splits sum to the total, fleet needs no more dispatches
+    # than sequential execution of the same work
+    stats = rt.dispatch_stats()
+    assert sched.stats["dispatches"] == rt.calls > 0
+    assert (stats["small_calls"] + stats["bucketed_calls"] +
+            stats["super_calls"]) == rt.calls
+    assert rt.frames_scored == rt_solo.frames_scored
+    assert rt.calls <= rt_solo.calls
+
+    # trace counts: the guard's exit check already passed (no retrace);
+    # per arch, traces never exceed the dispatch-shape vocabulary
+    vocab = rt.shape_vocab()
+    assert guard.traces_per_arch
+    for s, n in guard.traces_per_arch.items():
+        assert n <= len(vocab[s]), f"{s}: {n} traces > {len(vocab[s])} shapes"
+    for key, n in guard.new_traces.items():
+        assert n == 1
+
+
+def test_perf_smoke_small_path_threshold_is_live():
+    """The adaptive threshold actually routes: a sub-threshold batch
+    takes the lean layer, a super-threshold batch takes bucketing, on
+    the same runtime, with bitwise-equal results from both."""
+    from repro.core.operators import OperatorArch, init_operator
+
+    arch = OperatorArch("smoke_small", 2, 8, 16, 25)
+    sig = (2, 8, 16, 25)
+    params = init_operator(arch, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    crops = rng.uniform(size=(96, 25, 25, 3)).astype(np.float32)
+
+    # threshold set so 96 frames are small but 200 are not
+    cut = 150 * sig_flops(sig)
+    rt = OperatorRuntime(backend="jnp", small_flops=cut)
+    assert rt.is_small(sig, 96) and not rt.is_small(sig, 200)
+    rt.score_crops(params, arch, crops)
+    assert rt.dispatch_stats()["small_calls"] == 1
+    big = rng.uniform(size=(200, 25, 25, 3)).astype(np.float32)
+    rt.score_crops(params, arch, big)
+    assert rt.dispatch_stats()["bucketed_calls"] == 1
+
+    # both layers agree bitwise on the same input
+    lean = OperatorRuntime(backend="jnp", small_flops=float("inf"))
+    buck = OperatorRuntime(backend="jnp", small_flops=0)
+    pl, cl = lean.score_crops(params, arch, crops)
+    pb, cb = buck.score_crops(params, arch, crops)
+    assert np.array_equal(pl, pb) and np.array_equal(cl, cb)

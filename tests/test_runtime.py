@@ -1,16 +1,19 @@
 """OperatorRuntime + QuerySession: Pallas/jnp backend parity over the
 operator family's real shapes, jit-cache reuse (one trace per arch),
-backend auto-selection, and executor Progress equivalence between the
-runtime fast path and the pre-refactor per-chunk eager scoring."""
+dispatch-layer equivalence (small / bucketed / superbatch bitwise
+identical, property-tested), calls-accounting semantics, backend
+auto-selection, and executor Progress equivalence between the runtime
+fast path and the pre-refactor per-chunk eager scoring."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import HealthCheck, given, settings, st
 from numpy.testing import assert_allclose
 
 from repro.core.operators import (OperatorArch, init_operator, score_frames)
 from repro.core.query import Query, make_env
-from repro.core.runtime import (OperatorRuntime, arch_signature,
+from repro.core.runtime import (OperatorRuntime, TraceGuard, arch_signature,
                                 set_runtime)
 from repro.core.training import FrameBank
 from repro.kernels import ops as kops
@@ -59,7 +62,9 @@ def test_runtime_pallas_backend_matches_jnp_end_to_end():
 def test_runtime_single_trace_per_arch_across_calls():
     arch = OperatorArch("rt_cache", 2, 8, 16, 25)
     params = init_operator(arch, jax.random.PRNGKey(1))
-    rt = OperatorRuntime(backend="jnp")
+    # small_flops=0 pins every batch to the bucketed layer (the small
+    # path has its own per-quantized-shape cache, tested below)
+    rt = OperatorRuntime(backend="jnp", small_flops=0)
     rng = np.random.default_rng(1)
     # varying batch sizes inside one padding bucket: no retracing
     for n in (100, 128, 77, 128, 100):
@@ -82,6 +87,105 @@ def test_runtime_single_trace_per_arch_across_calls():
                    rng.uniform(size=(64, 50, 50, 3)).astype(np.float32))
     assert rt.n_compiled == 2
     assert rt.trace_count(other) == 1
+
+
+def test_runtime_small_path_skips_bucketing_and_matches():
+    """Below the flops-per-dispatch threshold the lean layer runs:
+    quantized (not power-of-two) shapes, its own one-trace-per-shape
+    cache, bitwise-identical results to the bucketed layer."""
+    arch = OperatorArch("rt_small", 2, 8, 16, 25)
+    params = init_operator(arch, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    crops = rng.uniform(size=(100, 25, 25, 3)).astype(np.float32)
+
+    small = OperatorRuntime(backend="jnp")       # default threshold
+    assert small.is_small(arch_signature(arch), 100)
+    ps, cs = small.score_crops(params, arch, crops)
+    stats = small.dispatch_stats()
+    assert stats["small_calls"] == 1 and stats["bucketed_calls"] == 0
+    # quantized to a multiple of small_quant, not a power-of-two bucket
+    [(sig, shape)] = list(small._shape_traces)
+    assert shape[0] == 128 and shape[0] % small.small_quant == 0
+
+    bucketed = OperatorRuntime(backend="jnp", small_flops=0)
+    pb, cb = bucketed.score_crops(params, arch, crops)
+    assert bucketed.dispatch_stats()["bucketed_calls"] == 1
+    assert np.array_equal(ps, pb) and np.array_equal(cs, cb)
+
+    # repeat sizes quantizing to the same shape share one trace
+    small.score_crops(params, arch, crops[:97])
+    assert small.trace_count(arch) == 1
+    # the threshold is monotone in n: the small/bucketed shape
+    # vocabularies can never collide on a (sig, shape) cache key
+    assert not small.is_small(arch_signature(arch), 10 ** 6)
+
+
+def test_runtime_small_and_bucketed_shapes_never_collide():
+    """Regression: smallness is judged on the *quantized* batch size,
+    so a small batch padded to 64 and a non-small batch bucketed to 64
+    cannot both exist — the two jit caches would otherwise trace the
+    same (sig, shape) twice and trip TraceGuard."""
+    from repro.core.runtime import sig_flops
+
+    arch = OperatorArch("rt_disjoint", 2, 8, 16, 25)
+    sig = arch_signature(arch)
+    params = init_operator(arch, jax.random.PRNGKey(11))
+    rng = np.random.default_rng(11)
+    # threshold between 50 and 63 frames of compute: under n-based
+    # smallness, 50 frames (quantized to 64) would go small while 63
+    # frames bucket to 64 — same shape, two caches
+    rt = OperatorRuntime(backend="jnp", small_flops=60 * sig_flops(sig))
+    with TraceGuard(rt):
+        for n in (50, 63, 64, 32, 1):
+            rt.score_crops(params, arch,
+                           rng.uniform(size=(n, 25, 25, 3)
+                                       ).astype(np.float32))
+    shapes = {shape for (_s, shape) in rt._shape_traces}
+    assert len(shapes) == len(rt._shape_traces)      # one trace per shape
+    # and the boundary batches really did land on the two sides
+    stats = rt.dispatch_stats()
+    assert stats["small_calls"] > 0 and stats["bucketed_calls"] > 0
+
+
+def test_runtime_calls_counts_jit_dispatches_on_every_path():
+    """``calls`` means jit dispatches — one per chunk in score_crops,
+    one per fused superbatch in score_demands — so BENCH dispatch
+    numbers are comparable across paths."""
+    arch = OperatorArch("rt_calls", 2, 8, 16, 25)
+    params = init_operator(arch, jax.random.PRNGKey(9))
+    rng = np.random.default_rng(9)
+    crops = rng.uniform(size=(300, 25, 25, 3)).astype(np.float32)
+
+    rt = OperatorRuntime(backend="jnp", chunk=128)
+    rt.score_crops(params, arch, crops)          # 300 frames -> 3 chunks
+    assert rt.calls == 3
+    stats = rt.dispatch_stats()
+    assert stats["small_calls"] + stats["bucketed_calls"] == 3
+    assert stats["super_calls"] == 0
+
+    class _Trained:
+        def __init__(self, arch, params):
+            self.arch, self.params = arch, params
+
+    class _Bank:
+        def __init__(self, c):
+            self._c = c
+
+        def crops(self, idxs, region, size):
+            return self._c[np.asarray(idxs)]
+
+    # two same-sig demands below chunk fuse into ONE superbatch dispatch
+    rt2 = OperatorRuntime(backend="jnp", small_flops=0)
+    rt2.score_demands(
+        [(_Trained(arch, params), _Bank(crops), np.arange(100)),
+         (_Trained(arch, params), _Bank(crops), np.arange(100, 200))],
+        group_max=2)
+    assert rt2.calls == 1
+    assert rt2.dispatch_stats()["super_calls"] == 1
+    # empty demands cost zero dispatches
+    rt2.score_demands(
+        [(_Trained(arch, params), _Bank(crops), np.arange(0))])
+    assert rt2.calls == 1
 
 
 def test_runtime_matches_eager_reference_bitwise():
@@ -121,6 +225,75 @@ def test_runtime_empty_and_padded_edges():
     assert p.shape == (1,)
     ep, _ = score_frames(params, one)
     assert_allclose(p, np.asarray(ep, np.float64), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# property: superbatched/grouped scoring == single-demand path, bitwise
+# ---------------------------------------------------------------------------
+
+class _PropTrained:
+    def __init__(self, arch, params):
+        self.arch, self.params = arch, params
+
+
+class _PropBank:
+    """FrameBank stand-in keyed the same way (region, size)."""
+
+    def __init__(self, n, seed):
+        self._n, self._cache = n, {}
+        self._seed = seed
+
+    def crops(self, idxs, region, size):
+        key = (region, size)
+        if key not in self._cache:
+            r = np.random.default_rng((self._seed, size, hash(region)
+                                       & 0xFFFF))
+            self._cache[key] = r.uniform(
+                size=(self._n, size, size, 3)).astype(np.float32)
+        return self._cache[key][np.asarray(idxs, np.int64)]
+
+
+_PROP_ARCHS = [
+    OperatorArch("prop_a", 2, 8, 16, 25),
+    OperatorArch("prop_a_r", 2, 8, 16, 25, region=(10, 10, 50, 50)),
+    OperatorArch("prop_b", 3, 16, 32, 50),
+]
+_PROP_PARAMS = [init_operator(a, jax.random.PRNGKey(40 + i))
+                for i, a in enumerate(_PROP_ARCHS)]
+_PROP_BANKS = [_PropBank(48, s) for s in range(2)]
+# shared across examples: the dispatch-shape vocabulary is small, so
+# reusing runtimes keeps compile cost O(shapes), not O(examples)
+_PROP_GROUPED = OperatorRuntime(backend="jnp", small_flops=0)
+_PROP_SINGLE = OperatorRuntime(backend="jnp")       # adaptive small path
+
+
+@given(st.lists(
+    st.tuples(st.integers(0, len(_PROP_ARCHS) - 1),   # arch (mixed regions)
+              st.integers(0, 1),                      # bank
+              st.integers(0, 48),                     # n frames (incl. 0, 1)
+              st.booleans()),                         # reversed index order
+    min_size=1, max_size=7),
+    st.integers(1, 5))                                # group_max
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+def test_property_superbatched_equals_single_demand(spec, group_max):
+    """Over random multisets of demands — mixed signatures, mixed
+    regions, sizes including 0 and 1 frame — grouped superbatch scoring
+    is bit-identical to scoring each demand alone on the adaptive
+    single-demand path, and never retraces a (signature, shape)."""
+    demands = []
+    for ai, bi, n, rev in spec:
+        idxs = np.arange(n)[::-1] if rev else np.arange(n)
+        demands.append((_PropTrained(_PROP_ARCHS[ai], _PROP_PARAMS[ai]),
+                        _PROP_BANKS[bi], idxs))
+    with TraceGuard(_PROP_GROUPED):
+        got = _PROP_GROUPED.score_demands(demands, group_max=group_max)
+    with TraceGuard(_PROP_SINGLE):
+        want = [_PROP_SINGLE.score(t, b, i) for t, b, i in demands]
+    for (gp, gc), (wp, wc) in zip(got, want):
+        assert np.array_equal(gp, wp)
+        assert np.array_equal(gc, wc)
 
 
 # ---------------------------------------------------------------------------
