@@ -106,12 +106,17 @@ def host_meta() -> dict:
     JSON — perf numbers from different machines are not comparable, so
     every artifact says where it came from."""
     import jax
+
+    from repro.launch.mesh import make_scoring_mesh
     dev = jax.devices()[0]
+    mesh = make_scoring_mesh()
     return {
         "device": getattr(dev, "device_kind", str(dev)),
         "backend": jax.default_backend(),
         "jax_version": jax.__version__,
         "cpu_count": os.cpu_count(),
+        "device_count": jax.device_count(),
+        "mesh_shape": dict(mesh.shape) if mesh is not None else None,
         "platform": platform.platform(),
     }
 

@@ -140,6 +140,11 @@ class MaxCountExecutor:
 class SampleCountExecutor:
     """avg/median Counting: pure random sampling + LLN (§6.3)."""
 
+    # operator-free: yields only UploadTicks, never a ScoreDemand — the
+    # FleetScheduler's bucket-complete watermark uses this to exclude
+    # it from the unknown-signature contributor census
+    demands_scoring = False
+
     def __init__(self, env: QueryEnv, *, stat: str = "mean",
                  tolerance: float = 0.01, sustain: int = 20):
         assert stat in ("mean", "median")

@@ -11,10 +11,24 @@ many of them:
     ``(group, bucket, …)`` dispatch per ``group_max`` same-(signature,
     bucket) chunks — eagerly, while the host loop keeps serving other
     queries' uplink ticks, so device compute overlaps the simulated
-    uplink via JAX async dispatch. Results stay on-device until the
-    no-ticks-pending barrier, where blocked steppers resume in task
-    order. Fewer, larger, shape-stable dispatches (see
-    ``benchmarks/bench_fleet.py``), identical event ordering.
+    uplink via JAX async dispatch. The scheduler additionally drives
+    the *bucket-complete* watermark: it tracks every unblocked query's
+    last-known arch signature and tells the batcher which queues can no
+    longer grow, so mixed-arch fleets (whose per-signature fan-in never
+    reaches ``group_max``) still issue before the barrier. Results stay
+    on-device until the no-ticks-pending barrier, where blocked
+    steppers resume in task order. Fewer, larger, shape-stable
+    dispatches (see ``benchmarks/bench_fleet.py``), identical event
+    ordering; the realized overlap is measured (``stats
+    ["overlap_host_s"]``) as host time spent serving the loop while
+    dispatches were in flight.
+
+  * **Device-parallel scoring.** ``FleetScheduler(mesh=...)`` (see
+    ``launch/mesh.make_scoring_mesh``) gives the fleet a dedicated
+    ``OperatorRuntime`` whose fused superbatches shard group-wise over
+    the mesh's data axis — bitwise-identical results (each member's
+    computation stays whole on one device), ``group_max`` rounded up
+    to a multiple of the device count so full groups shard evenly.
 
   * **Shared-uplink contention.** Each ``UploadTick`` is answered with
     ``seconds * factor`` where ``factor`` is the number of queries
@@ -37,16 +51,32 @@ operator at all (``SampleCountExecutor`` yields only UploadTicks).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.counting import MaxCountExecutor, SampleCountExecutor
 from repro.core.filtering import TaggingExecutor
 from repro.core.query import Progress, QueryEnv
 from repro.core.ranking import RetrievalExecutor
-from repro.core.runtime import (OperatorRuntime, ScoreBatcher, ScoreHandle,
-                                get_runtime)
+from repro.core.runtime import (ArchSig, OperatorRuntime, ScoreBatcher,
+                                ScoreHandle, arch_signature, get_runtime)
 from repro.core.stepper import ScoreDemand, UploadTick
+
+DEFAULT_GROUP_MAX = 8
+
+
+def device_aware_group_max(mesh=None, base: int = DEFAULT_GROUP_MAX) -> int:
+    """The fused-dispatch high-watermark for a mesh: ``base`` rounded up
+    to a multiple of the device count, so full superbatch groups always
+    shard evenly over the data axis (a non-dividing group size
+    replicates — correct, but it forfeits the dispatch's device
+    parallelism, so the watermark is sized to avoid it).
+    With no mesh (or one device) this is just ``base`` — layouts, and
+    therefore trace vocabularies, only change when the fleet outgrows
+    the mesh."""
+    d = mesh.size if mesh is not None else 1
+    return max(base, ((base + d - 1) // d) * d)
 
 
 def make_executor(env: QueryEnv, *, full_family: bool = False, **kw):
@@ -80,10 +110,21 @@ class _Task:
     handle: Optional[ScoreHandle] = None   # in-flight device results
     result: Optional[Progress] = None
     ticks: int = 0
+    sig: Optional[ArchSig] = None  # last demand's arch signature
+    pot: bool = False              # counted as a potential contributor
+    pot_key: Optional[ArchSig] = None      # key it is counted under
 
     @property
     def finished(self) -> bool:
         return self.result is not None
+
+    @property
+    def scoring(self) -> bool:
+        """May this executor ever yield a ScoreDemand?  Operator-free
+        kinds (``SampleCountExecutor``) declare ``demands_scoring =
+        False`` so they never hold the bucket-complete watermark open
+        as unknown-signature contributors."""
+        return getattr(self.executor, "demands_scoring", True)
 
 
 class FleetScheduler:
@@ -94,28 +135,44 @@ class FleetScheduler:
                       ``False`` reproduces standalone clocks exactly.
     ``cloud_ingress_bytes_per_s``
                       aggregate cloud ingress cap (None = unbounded).
-    ``group_max``     max demands fused into one runtime dispatch.
+    ``group_max``     max demands fused into one runtime dispatch
+                      (default: ``device_aware_group_max`` — 8, rounded
+                      up to a multiple of the mesh's device count).
+    ``mesh``          optional scoring mesh (``launch/mesh.
+                      make_scoring_mesh``): builds a dedicated
+                      device-parallel ``OperatorRuntime`` for this
+                      fleet when no explicit ``runtime`` is given.
     ``on_progress``   ``fn(qid, t, value)`` streamed per refinement.
     ``runtime``       OperatorRuntime override (default: process-global,
-                      so the whole fleet shares one jit cache).
+                      so the whole fleet shares one jit cache; with
+                      ``mesh``, a fleet-private sharded runtime).
     """
 
     def __init__(self, *, runtime: Optional[OperatorRuntime] = None,
                  contended: bool = True,
                  cloud_ingress_bytes_per_s: Optional[float] = None,
-                 group_max: int = 8,
+                 group_max: Optional[int] = None,
+                 mesh=None,
                  on_progress: Optional[Callable[[str, float, float],
                                                None]] = None):
         self._runtime = runtime
+        self.mesh = mesh
         self.contended = contended
         self.cloud_ingress = cloud_ingress_bytes_per_s
-        self.group_max = group_max
+        self.group_max = (group_max if group_max is not None
+                          else device_aware_group_max(mesh))
         self.on_progress = on_progress
         self.tasks: List[_Task] = []
-        self.stats: Dict[str, float] = {}
+        self.stats: Dict[str, object] = {}
+        # potential-contributor census for the bucket-complete
+        # watermark: key = last-known arch signature (None = a scoring
+        # task that has not demanded yet, so its signature is unknown)
+        self._pot: Dict[Optional[ArchSig], int] = {}
 
     @property
     def runtime(self) -> OperatorRuntime:
+        if self._runtime is None and self.mesh is not None:
+            self._runtime = OperatorRuntime(mesh=self.mesh)
         return self._runtime if self._runtime is not None else get_runtime()
 
     # -- fleet assembly -------------------------------------------------------
@@ -199,16 +256,46 @@ class FleetScheduler:
         else:
             raise TypeError(f"unknown work item from {task.qid}: {item!r}")
 
+    # -- bucket-complete watermark census -------------------------------------
+
+    def _pot_add(self, task: _Task) -> None:
+        """Count a scoring task as a potential contributor under its
+        last-known signature (None until its first demand)."""
+        if task.pot or not task.scoring:
+            return
+        key = task.sig
+        self._pot[key] = self._pot.get(key, 0) + 1
+        task.pot, task.pot_key = True, key
+
+    def _pot_remove(self, task: _Task) -> None:
+        if task.pot:
+            self._pot[task.pot_key] -= 1
+            task.pot = False
+
+    def _possible_sigs(self) -> Optional[Set[ArchSig]]:
+        """Signatures that may still gain queued chunks before the next
+        flush. ``None`` (wildcard) while any scoring task's signature
+        is unknown — nothing can be ruled out then."""
+        if self._pot.get(None, 0) > 0:
+            return None
+        return {k for k, v in self._pot.items() if v > 0 and k is not None}
+
     def _advance(self, task: _Task, resp, batcher: ScoreBatcher) -> None:
         """Resume one stepper and, if it blocks on a ScoreDemand, submit
         the demand to the batcher *immediately*. The dispatch may go to
         the device right away (queue at ``group_max``) while the task
         stays parked until the barrier — eager issue, unchanged
-        event ordering."""
+        event ordering. Keeps the contributor census current: a task
+        that just submitted (or finished) cannot add chunks until it is
+        resumed again, so it leaves the census; a ticking task stays."""
         self._step(task, resp)
         if task.demand is not None:
+            task.sig = arch_signature(task.demand.trained.arch)
+            self._pot_remove(task)
             task.handle = batcher.submit(
                 task.demand.trained, task.env.bank, task.demand.idxs)
+        elif task.finished:
+            self._pot_remove(task)
 
     def run(self) -> Dict[str, Progress]:
         """Drive every query to completion: UploadTicks are answered one
@@ -233,8 +320,17 @@ class FleetScheduler:
         calls0, frames0 = rt.calls, rt.frames_scored
         batcher = ScoreBatcher(rt, group_max=self.group_max)
         rounds = 0
+        # real host-time accounting (never feeds the simulated clocks):
+        # overlap_host_s integrates host work done while score
+        # dispatches were in flight on the device; result_block_s is
+        # time spent waiting on device results at the barrier
+        overlap_s = 0.0
+        block_s = 0.0
+        for task in self.tasks:
+            self._pot_add(task)
         for task in self.tasks:
             self._advance(task, None, batcher)
+            batcher.fire_complete(self._possible_sigs())
         while True:
             # earliest pending transfer across the fleet first
             ticking = [t for t in self.tasks if t.tick is not None]
@@ -242,8 +338,12 @@ class FleetScheduler:
                 task = min(ticking, key=lambda t: (t.tick.at, t.order))
                 item = task.tick
                 task.ticks += 1
+                t0 = time.perf_counter() if batcher.in_flight else None
                 self._advance(task, item.seconds *
                               self._uplink_factor(task, item.at), batcher)
+                batcher.fire_complete(self._possible_sigs())
+                if t0 is not None:
+                    overlap_s += time.perf_counter() - t0
                 continue
             # no transfers in flight (the no-ticks-pending watermark):
             # flush partial groups, then resume every score-blocked
@@ -253,16 +353,32 @@ class FleetScheduler:
                 break
             rounds += 1
             batcher.flush()
+            # every blocked task is about to be resumed and may submit
+            # again — back into the census (under its current
+            # signature) until its resumption decides otherwise
+            for task in blocked:
+                self._pot_add(task)
             for task in blocked:
                 handle, task.handle = task.handle, None
-                self._advance(task, handle.result(), batcher)
+                t0 = time.perf_counter()
+                resp = handle.result()
+                block_s += time.perf_counter() - t0
+                t0 = time.perf_counter() if batcher.in_flight else None
+                self._advance(task, resp, batcher)
+                batcher.fire_complete(self._possible_sigs())
+                if t0 is not None:
+                    overlap_s += time.perf_counter() - t0
         self.stats = {
             "queries": len(self.tasks),
             "cameras": len({t.camera for t in self.tasks}),
             "score_rounds": rounds,
             "dispatches": rt.calls - calls0,
             "eager_dispatches": batcher.eager_dispatches,
+            "watermark_fires": dict(batcher.watermark_fires),
             "frames_scored": rt.frames_scored - frames0,
             "upload_ticks": sum(t.ticks for t in self.tasks),
+            "overlap_host_s": round(overlap_s, 4),
+            "result_block_s": round(block_s, 4),
+            **rt.mesh_info(),
         }
         return {t.qid: t.result for t in self.tasks}

@@ -37,16 +37,31 @@ dispatches eagerly as demands accumulate and keeps results on-device
 dispatch then overlaps device compute with the host-side uplink
 simulation. The process-global runtime means a query fleet sharing one
 host also shares one compilation cache.
+
+On multi-device hosts the runtime adds a fourth, orthogonal dimension:
+constructed with a 1-D ``("data",)`` mesh (``launch/mesh.
+make_scoring_mesh``), stacked superbatches are committed with a
+group-axis ``NamedSharding`` and XLA partitions the same traced scorer
+body across devices — one trace per (signature, shape) still,
+bitwise-identical results (each group member's computation stays whole
+on one device), N-way device parallelism per fused dispatch. Group
+sizes that do not divide the device count replicate instead
+(``parallel/sharding`` divisibility rules, recorded and summarized by
+``sharding_fallbacks()``); flat small/bucketed batches stay
+single-device unless ``shard_frames=True`` explicitly opts into
+frame-axis sharding, which is *not* bitwise-safe on XLA:CPU (local row
+counts change gemm blocking, reassociating accumulation by ~1 ulp).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.parallel import sharding as shd
 
 ArchSig = Tuple[int, int, int, int]
 
@@ -93,6 +108,25 @@ class OperatorRuntime:
     auto per backend). ``calls`` counts **jit dispatches** on every
     path (one fused superbatch = one call), so dispatch numbers are
     comparable between ``score_crops`` and ``ScoreBatcher`` scoring.
+
+    ``mesh``: an optional 1-D ``("data",)`` mesh (see
+    ``launch/mesh.make_scoring_mesh``). When it holds >1 device, every
+    stacked superbatch is placed with a group-axis ``NamedSharding``
+    so XLA partitions the scorer body across devices (GSPMD). Each
+    group member's full ``(bucket, …)`` computation stays whole on one
+    device — exactly the single-device shapes and accumulation order —
+    so sharded results are bitwise identical to single-device ones
+    (asserted in ``tests/test_sharded_scoring.py``). Group sizes that
+    do not divide the data axis replicate instead of crashing
+    (``parallel/sharding`` divisibility rules); each such step-down is
+    recorded and summarized by ``sharding_fallbacks()``. Flat
+    small/bucketed batches stay on the default device: frame-axis
+    partitioning shrinks the local row count, which changes XLA:CPU
+    gemm blocking and reassociates accumulation (~1 ulp) — opt in with
+    ``shard_frames=True`` only where that is acceptable. The sharding
+    spec is a pure function of the dispatch shape, so a given
+    (signature, shape) still traces exactly once — TraceGuard holds
+    under sharding.
     """
 
     def __init__(self, *, backend: Optional[str] = None,
@@ -100,7 +134,8 @@ class OperatorRuntime:
                  min_bucket: int = MIN_BUCKET,
                  small_flops: float = SMALL_FLOPS,
                  small_quant: int = SMALL_QUANT,
-                 superbatch: Optional[str] = None):
+                 superbatch: Optional[str] = None,
+                 mesh=None, shard_frames: bool = False):
         self.backend = backend or kops.default_conv_backend()
         if self.backend not in ("pallas", "jnp"):
             raise ValueError(f"unknown conv backend: {self.backend!r}")
@@ -116,6 +151,12 @@ class OperatorRuntime:
             "vmap" if self.backend == "pallas" else "unroll")
         if self.superbatch not in ("vmap", "unroll"):
             raise ValueError(f"unknown superbatch style: {self.superbatch!r}")
+        # device-parallel dispatch: shard inputs over the mesh's data
+        # axis when there is more than one device to spread across
+        self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
+        self.device_count = mesh.size if self.mesh is not None else 1
+        self.shard_frames = bool(shard_frames)
+        self._fallbacks: List[tuple] = []   # (axis, dim, mapped) records
         # input batches are built fresh per dispatch, so they are safe
         # to donate; XLA only honors donation off-CPU (kops helper)
         self._donate = (1,) if kops.donation_supported() else ()
@@ -259,6 +300,22 @@ class OperatorRuntime:
             "frames_padded": self.frames_padded,
         }
 
+    def mesh_info(self) -> Dict[str, object]:
+        """Mesh identification for bench artifacts: every BENCH json
+        records where (and across how many devices) it was measured."""
+        return {
+            "device_count": self.device_count,
+            "mesh_shape": (dict(self.mesh.shape)
+                           if self.mesh is not None else None),
+            "sharded": self.mesh is not None,
+        }
+
+    def sharding_fallbacks(self) -> list:
+        """Summarized divisibility fallbacks hit so far (dims that
+        replicated instead of sharding) — ``explain_fallbacks`` over
+        the raw records, for the roofline / bench reports."""
+        return shd.explain_fallbacks(self._fallbacks)
+
     # -- dispatch layers -----------------------------------------------------
 
     def _bucket(self, n: int) -> int:
@@ -292,11 +349,35 @@ class OperatorRuntime:
         return np.concatenate(
             [x, np.zeros((to - m,) + x.shape[1:], np.float32)])
 
+    def _place(self, x, *, grouped: bool):
+        """Device placement for one dispatch input. Without a mesh this
+        is ``jnp.asarray`` (single device, unchanged fast path); with
+        one, stacked superbatches are committed with the group-axis
+        ``NamedSharding`` derived from their shape (replicated when the
+        group does not divide — recorded fallback) so the jit below
+        partitions across devices with bitwise-identical results. Flat
+        batches stay on the default device unless ``shard_frames`` opts
+        into the bit-unsafe frame-axis sharding. The spec is a pure
+        function of the shape, so equal shapes always carry equal
+        shardings and the jit cache never sees a (shape, sharding)
+        collision."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        if grouped:
+            spec = shd.superbatch_spec(x.shape, self.mesh, self._fallbacks)
+        elif self.shard_frames:
+            spec = shd.frames_spec(x.shape, self.mesh, self._fallbacks)
+        else:
+            return jnp.asarray(x)
+        return jax.device_put(jnp.asarray(x),
+                              jax.sharding.NamedSharding(self.mesh, spec))
+
     def _dispatch(self, sig: ArchSig, fn: Callable, params, x,
                   *, kind: str):
         """Every jit dispatch funnels through here: counts calls (the
-        unit ``calls`` means on every path) and records the shape
-        vocabulary. Returns on-device arrays."""
+        unit ``calls`` means on every path), records the shape
+        vocabulary, and places the input on the mesh (sharded when one
+        is configured). Returns on-device arrays."""
         self.calls += 1
         if kind == "small":
             self.small_calls += 1
@@ -305,7 +386,7 @@ class OperatorRuntime:
         else:
             self.bucketed_calls += 1
         self._shape_vocab.setdefault(sig, set()).add(tuple(x.shape))
-        return fn(params, x)
+        return fn(params, self._place(x, grouped=(kind == "super")))
 
     def _dispatch_chunk(self, sig: ArchSig, params, x: np.ndarray):
         """One chunk through the lean or bucketed layer (padding as the
@@ -315,11 +396,11 @@ class OperatorRuntime:
             n = self._quantize_small(m)
             return self._dispatch(
                 sig, self._small_fn(sig, n), params,
-                jnp.asarray(self._pad_rows(x, n)), kind="small")
+                self._pad_rows(x, n), kind="small")
         b = self._bucket(m)
         return self._dispatch(
             sig, self._bucket_fn(sig), params,
-            jnp.asarray(self._pad_rows(x, b)), kind="bucketed")
+            self._pad_rows(x, b), kind="bucketed")
 
     # -- scoring -------------------------------------------------------------
 
@@ -376,19 +457,26 @@ class OperatorRuntime:
 class _Out:
     """One dispatch's on-device output; converted to float64 numpy once,
     on first consumption — until then results stay on-device, which is
-    what lets JAX async dispatch overlap scoring with host-side work."""
+    what lets JAX async dispatch overlap scoring with host-side work.
+    ``on_consume`` (if given) fires at that first conversion — the
+    ScoreBatcher uses it to track how many dispatches are in flight,
+    which is what makes score/uplink overlap *measurable*."""
 
-    __slots__ = ("p", "c", "_np")
+    __slots__ = ("p", "c", "_np", "_cb")
 
-    def __init__(self, p, c):
+    def __init__(self, p, c, on_consume: Optional[Callable] = None):
         self.p, self.c = p, c
         self._np: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._cb = on_consume
 
     def to_np(self) -> Tuple[np.ndarray, np.ndarray]:
         if self._np is None:
             self._np = (np.asarray(self.p, np.float64),
                         np.asarray(self.c, np.float64))
             self.p = self.c = None          # free the device buffers
+            if self._cb is not None:
+                self._cb()
+                self._cb = None
         return self._np
 
 
@@ -436,28 +524,50 @@ class ScoreBatcher:
 
     ``submit`` cuts a demand into chunks immediately (host-side crop +
     pad), sends small chunks straight through the lean layer, and
-    queues bucketed chunks per (signature, bucket); a queue reaching
-    ``group_max`` dispatches eagerly as one stacked superbatch — the
-    scheduler's high-watermark. ``flush`` dispatches the partial
-    remainder (singles go through the bucketed layer so no new
-    superbatch shape is traced for a leftover group size of 1).
+    queues bucketed chunks per (signature, bucket). Three watermarks
+    turn queues into dispatches:
+
+      * **group_max** — a queue reaching ``group_max`` dispatches
+        immediately as one stacked superbatch (the high-watermark);
+      * **bucket complete** — ``fire_complete(possible_sigs)`` lets a
+        scheduler that knows which signatures can still receive chunks
+        (the FleetScheduler tracks every unblocked query's last-known
+        arch) dispatch the queues that *cannot grow any further* —
+        without this, mixed-arch fleets whose per-signature fan-in
+        never reaches ``group_max`` issue nothing until the barrier
+        and forfeit all score/uplink overlap;
+      * **flush** — the no-ticks barrier dispatches every remainder
+        (singles go through the bucketed layer so no superbatch shape
+        is traced for a leftover group size of 1).
 
     Dispatches return immediately with on-device results
     (:class:`ScoreHandle`); callers resolve them as late as possible,
-    letting device compute overlap host work in between. Every layout
-    this class may choose is bit-identical to single-demand scoring, so
-    grouping decisions are pure performance tuning.
+    letting device compute overlap host work in between. ``in_flight``
+    counts dispatches whose results have not been consumed yet — the
+    observable the fleet's overlap measurement integrates over. Every
+    layout this class may choose is bit-identical to single-demand
+    scoring, so watermark choices are pure performance tuning.
     """
 
     def __init__(self, runtime: OperatorRuntime, *, group_max: int = 8):
         self.rt = runtime
         self.group_max = max(int(group_max), 1)
         self._queues: Dict[Tuple[ArchSig, int], List[tuple]] = {}
-        self.eager_dispatches = 0    # full groups issued before flush()
+        self.eager_dispatches = 0    # issued before flush(), any watermark
+        self.watermark_fires = {"group_max": 0, "bucket_complete": 0}
+        self.in_flight = 0           # dispatched, results not yet consumed
 
     def pending(self) -> int:
         """Chunks queued but not yet dispatched."""
         return sum(len(q) for q in self._queues.values())
+
+    def _out(self, p, c) -> _Out:
+        """Wrap one dispatch's device arrays with in-flight tracking."""
+        self.in_flight += 1
+        return _Out(p, c, on_consume=self._consumed)
+
+    def _consumed(self) -> None:
+        self.in_flight -= 1
 
     def submit(self, trained, bank, idxs) -> ScoreHandle:
         """Enqueue one demand; returns its handle (resolve after the
@@ -478,7 +588,7 @@ class ScoreBatcher:
             handle._chunks += 1
             if self.group_max == 1 or rt.is_small(sig, m):
                 p, c = rt._dispatch_chunk(sig, trained.params, x)
-                handle._add_part(i, m, _Out(p, c), None)
+                handle._add_part(i, m, self._out(p, c), None)
                 continue
             b = rt._bucket(m)
             q = self._queues.setdefault((sig, b), [])
@@ -487,7 +597,24 @@ class ScoreBatcher:
                 self._dispatch_group(sig, q)
                 self._queues[(sig, b)] = []
                 self.eager_dispatches += 1
+                self.watermark_fires["group_max"] += 1
         return handle
+
+    def fire_complete(self, possible_sigs: Optional[Set[ArchSig]]) -> None:
+        """The bucket-complete watermark: dispatch every queue whose
+        signature is *not* in ``possible_sigs`` — the caller asserts no
+        future chunk can join those queues before the next flush, so
+        waiting buys nothing and issuing now buys overlap. ``None``
+        means the caller cannot rule anything out (some query's next
+        signature is unknown): no-op, the conservative default."""
+        if possible_sigs is None:
+            return
+        for (sig, _b), q in list(self._queues.items()):
+            if q and sig not in possible_sigs:
+                self._dispatch_group(sig, q)
+                self._queues[(sig, _b)] = []
+                self.eager_dispatches += 1
+                self.watermark_fires["bucket_complete"] += 1
 
     def flush(self) -> None:
         """Dispatch every queued partial group (the no-ticks-pending
@@ -501,16 +628,16 @@ class ScoreBatcher:
         rt = self.rt
         if len(group) == 1:
             handle, off, m, params, x = group[0]
-            p, c = rt._dispatch(sig, rt._bucket_fn(sig), params,
-                                jnp.asarray(x), kind="bucketed")
-            handle._add_part(off, m, _Out(p, c), None)
+            p, c = rt._dispatch(sig, rt._bucket_fn(sig), params, x,
+                                kind="bucketed")
+            handle._add_part(off, m, self._out(p, c), None)
             return
         stacked = jax.tree_util.tree_map(
             lambda *leaves: jnp.stack(leaves), *[g[3] for g in group])
-        xs = jnp.asarray(np.stack([g[4] for g in group]))
+        xs = np.stack([g[4] for g in group])
         ps, cs = rt._dispatch(sig, rt._super_fn(sig), stacked, xs,
                               kind="super")
-        out = _Out(ps, cs)
+        out = self._out(ps, cs)
         for row, (handle, off, m, _params, _x) in enumerate(group):
             handle._add_part(off, m, out, row)
 

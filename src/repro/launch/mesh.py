@@ -6,6 +6,8 @@ touches jax device state (the dry-run sets XLA_FLAGS before first init).
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,3 +21,20 @@ def make_local_mesh():
     """Single-host mesh for smoke tests / examples (1 device)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_scoring_mesh(devices=None):
+    """1-D ("data",) mesh for device-parallel operator scoring.
+
+    The scoring runtime shards frame batches over a single data axis
+    (see ``parallel/sharding.frames_spec``/``superbatch_spec``); this
+    builds that mesh over all local devices — real accelerators, or CPU
+    devices forced with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (the multi-device CI job). Returns ``None`` on single-device hosts
+    so callers can pass the result straight to ``OperatorRuntime(mesh=...)``
+    and get the unsharded fast path when there is nothing to shard.
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), ("data",))

@@ -135,3 +135,65 @@ def cache_shardings(cfg, caches_shapes, mesh: Mesh, batch: int):
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# -- scoring-batch specs (device-parallel operator dispatch) -----------------
+#
+# The scoring runtime (core/runtime.py) ships flat frame batches
+# ``(frames, h, w, c)`` and stacked superbatches ``(group, frames, h, w,
+# c)``. Frames (and group members) are mutually independent, so either
+# leading axis may shard over "data" — subject to the same divisibility
+# guard as every rule above: a non-dividing dim replicates (recorded,
+# never fatal), because a crashed dispatch is worse than a replicated
+# one and the fallback shows up in ``explain_fallbacks``.
+#
+# Bit-equality caveat: only *group*-axis sharding is guaranteed bitwise
+# identical to single-device execution — each group member's full
+# ``(bucket, …)`` computation stays whole on one device, so every local
+# matmul/conv has exactly the single-device shapes and accumulation
+# order. Frame-axis sharding shrinks the local row count, which changes
+# XLA:CPU's gemm blocking and can reassociate dot-product accumulation
+# (observed: 1-ulp drift at some shapes). The runtime therefore shards
+# superbatches group-axis-or-replicate by default and offers frame-axis
+# sharding only behind an explicit opt-in (``shard_frames=True``).
+
+SCORING_RULES = {"frames": ("data",), "group": ("data",)}
+
+
+def frames_spec(shape, mesh: Mesh, fallbacks=None) -> P:
+    """Shard dim 0 (frames) of a flat scoring batch; replicate the rest.
+    Falls back to fully replicated when the frame count does not divide
+    the data axis (recorded in ``fallbacks``). Not bitwise-safe on
+    XLA:CPU — see the bit-equality caveat above."""
+    axes = ("frames",) + (None,) * (len(shape) - 1)
+    return spec_for_leaf(shape, axes, mesh, SCORING_RULES, fallbacks)
+
+
+def superbatch_spec(shape, mesh: Mesh, fallbacks=None) -> P:
+    """Shard a stacked ``(group, frames, ...)`` superbatch on its group
+    axis (whole queries stay device-local, preserving single-device
+    shapes — hence bitwise results); when the group size does not
+    divide the data axis the batch replicates, recorded in
+    ``fallbacks`` for ``explain_fallbacks``. Deliberately no frame-axis
+    fallback: that would trade bit-equality for utilization (see the
+    caveat above)."""
+    axes = ("group",) + (None,) * (len(shape) - 1)
+    return spec_for_leaf(shape, axes, mesh, SCORING_RULES, fallbacks)
+
+
+def explain_fallbacks(fallbacks) -> list:
+    """Summarize collected ``(axis, dim, mapped)`` fallback records.
+
+    Every sharding helper in this module appends a record whenever a
+    dim silently replicates instead of sharding; this rolls the raw
+    stream up into one JSON-friendly entry per (logical axis, mesh
+    axes) pair — ``{"axis", "mesh_axes", "count", "dims"}`` with
+    ``dims`` the sorted distinct offending sizes — for the roofline /
+    bench reports (no silent performance cliffs).
+    """
+    grouped: Dict[Tuple[str, Tuple[str, ...]], list] = {}
+    for axis, dim, mapped in fallbacks:
+        grouped.setdefault((axis, tuple(mapped)), []).append(int(dim))
+    return [{"axis": axis, "mesh_axes": list(mapped),
+             "count": len(dims), "dims": sorted(set(dims))}
+            for (axis, mapped), dims in sorted(grouped.items())]

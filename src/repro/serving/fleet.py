@@ -33,11 +33,15 @@ class FleetService:
 
     def __init__(self, *, contended: bool = True,
                  cloud_ingress_bytes_per_s: Optional[float] = None,
-                 group_max: int = 8, full_family: bool = False,
-                 train_steps: int = 150):
+                 group_max: Optional[int] = None,
+                 full_family: bool = False,
+                 train_steps: int = 150, mesh=None):
         self.contended = contended
         self.cloud_ingress = cloud_ingress_bytes_per_s
+        # None defers to the scheduler's device-aware default; see
+        # core/fleet.device_aware_group_max
         self.group_max = group_max
+        self.mesh = mesh
         self.full_family = full_family
         self.train_steps = train_steps
         self._cameras: Dict[str, Tuple[Video, lm_mod.LandmarkStore,
@@ -92,7 +96,8 @@ class FleetService:
         sched = FleetScheduler(
             contended=self.contended,
             cloud_ingress_bytes_per_s=self.cloud_ingress,
-            group_max=self.group_max, on_progress=on_progress)
+            group_max=self.group_max, mesh=self.mesh,
+            on_progress=on_progress)
         for qid, camera, executor, kw in self._submissions:
             sched.add(qid, camera, executor, prog=self._progress[qid],
                       **kw)

@@ -1,0 +1,176 @@
+"""Worker for ``tests/test_sharded_scoring.py``: sharded-vs-unsharded
+equivalence on a forced multi-device CPU host.
+
+Run as a script with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+in the environment (XLA reads the flag at first jax init, so the forcing
+*must* happen in a fresh process — the parent test sets it and spawns
+this file). Prints one JSON object on stdout; any assertion failure
+exits non-zero with the traceback on stderr.
+
+What it checks, all on the same seeded world:
+
+  * fleet runs with a mesh-sharded ``OperatorRuntime`` are **bitwise**
+    Progress-equivalent to single-device runs (points, bytes, done_t,
+    op switches);
+  * the sharded run holds the one-trace-per-(signature, shape)
+    invariant (``TraceGuard``) and its per-arch trace counts equal the
+    unsharded run's — device parallelism adds zero retraces;
+  * ``score_crops`` through the small/bucketed layers is bitwise equal
+    between mesh-aware and plain runtimes (flat batches stay
+    single-device by policy: frame-axis partitioning reassociates
+    XLA:CPU gemm accumulation, so it is opt-in only);
+  * superbatch dispatches are bitwise equal to per-demand scoring both
+    when the group shards (size divides the device count) and when it
+    replicates (size does not divide — the recorded fallback path).
+"""
+import json
+
+import numpy as np
+
+
+def _fleet(world, mesh, group_max):
+    from repro.core.fleet import FleetScheduler
+    from repro.core.runtime import OperatorRuntime, TraceGuard, set_runtime
+
+    rt = OperatorRuntime(backend="jnp", mesh=mesh)
+    prev = set_runtime(rt)
+    try:
+        sched = FleetScheduler(contended=False, runtime=rt,
+                               group_max=group_max)
+        for i, (cam, kind, kw) in enumerate(world["specs"]):
+            sched.add(f"q{i}", cam, world["make"](cam, kind), **kw)
+        with TraceGuard(rt) as guard:
+            res = sched.run()
+    finally:
+        set_runtime(prev)
+    return res, sched, guard, rt
+
+
+def _world(hours=0.1, train_steps=20):
+    from repro.core import landmarks as lm_mod
+    from repro.core.fleet import make_executor
+    from repro.core.hardware import YOLO_V3
+    from repro.core.query import Query, make_env
+    from repro.core.training import FrameBank
+    from repro.core.video import QUERY_CLASS, Video, corpus
+
+    cams = ("JacksonH", "Banff")
+    videos = {n: Video(corpus(hours=hours)[n]) for n in cams}
+    stores = {n: lm_mod.build_landmarks(v, 30, YOLO_V3)
+              for n, v in videos.items()}
+    banks = {n: FrameBank(v) for n, v in videos.items()}
+
+    def make(cam, kind):
+        env = make_env(videos[cam], Query(kind, QUERY_CLASS[cam]),
+                       stores[cam], bank=banks[cam],
+                       train_steps=train_steps)
+        return make_executor(env, full_family=False)
+
+    # mixed kinds: two scoring sigs sharing a camera + an operator-free
+    # sampler, so the run exercises superbatch, bucketed, small, and
+    # the bucket-complete watermark paths
+    specs = [("JacksonH", "retrieval", {"max_passes": 2}),
+             ("JacksonH", "count_max", {"max_passes": 2}),
+             ("Banff", "retrieval", {"max_passes": 2}),
+             ("Banff", "count_avg", {})]
+    return {"make": make, "specs": specs}
+
+
+def _progress_key(prog):
+    return {"points": prog.points, "bytes_up": prog.bytes_up,
+            "done_t": prog.done_t, "op_switches": prog.op_switches}
+
+
+def main():
+    import jax
+
+    from repro.core.operators import OperatorArch, init_operator
+    from repro.core.runtime import OperatorRuntime
+    from repro.launch.mesh import make_scoring_mesh
+
+    n_dev = len(jax.devices())
+    assert n_dev >= 2, f"forced host device count missing: {n_dev} devices"
+    mesh = make_scoring_mesh()
+    assert mesh is not None and mesh.size == n_dev
+
+    # -- fleet equivalence -------------------------------------------------
+    world = _world()
+    solo_res, solo_sched, solo_guard, _ = _fleet(world, None, 8)
+    shrd_res, shrd_sched, shrd_guard, shrd_rt = _fleet(world, mesh, 8)
+
+    for qid, prog in solo_res.items():
+        a, b = _progress_key(prog), _progress_key(shrd_res[qid])
+        assert a == b, f"{qid}: sharded Progress diverged: {a} vs {b}"
+
+    solo_traces = solo_guard.traces_per_arch
+    shrd_traces = shrd_guard.traces_per_arch
+    assert shrd_traces == solo_traces, \
+        f"sharded tracing differs: {shrd_traces} vs {solo_traces}"
+    assert shrd_sched.stats["dispatches"] == solo_sched.stats["dispatches"]
+    assert shrd_sched.stats["sharded"] and shrd_sched.stats[
+        "device_count"] == n_dev
+
+    # -- dispatch-layer equivalence incl. fallback shapes ------------------
+    arch = OperatorArch("shard_probe", 3, 16, 32, 50)
+    params = init_operator(arch, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(7)
+    plain = OperatorRuntime(backend="jnp")
+    shard = OperatorRuntime(backend="jnp", mesh=mesh)
+    for n in (96,          # small path
+              200,         # bucketed path (pads to 256)
+              1500):       # two chunks: bucketed 1024 + 512
+        crops = rng.uniform(size=(n, 50, 50, 3)).astype(np.float32)
+        pw, cw = plain.score_crops(params, arch, crops)
+        pg, cg = shard.score_crops(params, arch, crops)
+        assert np.array_equal(pw, pg) and np.array_equal(cw, cg), \
+            f"score_crops diverged on mesh-aware runtime at n={n}"
+
+    # superbatch: group of n_dev (group-axis sharded) and of n_dev + 1
+    # (does not divide -> replicated fallback), both bitwise equal
+    class _Trained:
+        def __init__(self, arch, params):
+            self.arch, self.params = arch, params
+
+    class _Bank:
+        def __init__(self, crops):
+            self._c = crops
+
+        def crops(self, idxs, region, size):
+            return self._c[np.asarray(idxs)]
+
+    super_rt = OperatorRuntime(backend="jnp", mesh=mesh)
+    for g in (n_dev, n_dev + 1):
+        demands = []
+        for k in range(g):
+            a = OperatorArch(f"g{k}", 3, 16, 32, 50)
+            p = init_operator(a, jax.random.PRNGKey(100 + k))
+            c = rng.uniform(size=(300, 50, 50, 3)).astype(np.float32)
+            demands.append((_Trained(a, p), _Bank(c), np.arange(300)))
+        want = [OperatorRuntime(backend="jnp").score_crops(
+            t.params, t.arch, b._c) for t, b, _ in demands]
+        got = super_rt.score_demands(demands, group_max=g)
+        for (wp, wc), (gp, gc) in zip(want, got):
+            assert np.array_equal(wp, gp) and np.array_equal(wc, gc), \
+                f"superbatch group={g} diverged under sharding"
+
+    # the dividing group sharded silently; the non-dividing one recorded
+    # exactly its replication fallback (no frame-axis second guess)
+    fallbacks = super_rt.sharding_fallbacks()
+    assert [(e["axis"], e["dims"]) for e in fallbacks] == \
+        [("group", [n_dev + 1])], f"unexpected fallbacks: {fallbacks}"
+    print(json.dumps({
+        "device_count": n_dev,
+        "mesh_shape": dict(mesh.shape),
+        "fleet_traces_per_arch": shrd_traces,
+        "fleet_dispatches": shrd_sched.stats["dispatches"],
+        "eager_dispatches": shrd_sched.stats["eager_dispatches"],
+        "watermark_fires": shrd_sched.stats["watermark_fires"],
+        "overlap_host_s": shrd_sched.stats["overlap_host_s"],
+        "sharding_fallbacks": fallbacks,
+        "fleet_super_calls": shrd_rt.dispatch_stats()["super_calls"],
+        "super_calls": super_rt.dispatch_stats()["super_calls"],
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -119,6 +119,24 @@ def test_fleet_single_trace_per_arch_signature(fleet_vs_solo):
         assert n == 1, f"{key} traced {n}x inside the fleet run"
 
 
+def test_fleet_eager_dispatch_fires_on_mixed_arch_workload(fleet_vs_solo):
+    """Regression: the bucket-complete watermark must actually fire on
+    the 8-query mixed-arch fleet.  Before the watermark, mixed-arch
+    workloads never reached ``group_max`` for any single signature, so
+    ``eager_dispatches`` was 0 and every score round serialized behind
+    the no-ticks barrier."""
+    _, _, _, sched, _ = fleet_vs_solo
+    fires = sched.stats["watermark_fires"]
+    assert sched.stats["eager_dispatches"] > 0, \
+        f"no eager dispatches on the mixed-arch fleet (fires={fires})"
+    assert fires["bucket_complete"] > 0
+    # eager dispatch gives the tick loop in-flight work to overlap; the
+    # measured host-side overlap accumulator must have engaged
+    assert sched.stats["overlap_host_s"] >= 0.0
+    assert sched.stats["device_count"] >= 1
+    assert sched.stats["sharded"] is False      # no mesh in this fixture
+
+
 def test_trace_guard_raises_on_retrace():
     """TraceGuard surfaces a retrace as RetraceError with the offending
     signature/shape in the message."""

@@ -93,6 +93,65 @@ def test_perf_smoke_dispatch_traces_and_bit_equivalence():
         assert n == 1
 
 
+def test_perf_smoke_mesh_fleet_matches_standalone():
+    """Device-parallel smoke: the same tiny fleet run through a
+    mesh-aware scheduler (``make_scoring_mesh()`` — the all-local-
+    devices data mesh, or ``None`` on single-device hosts, where this
+    degenerates to the plain path) stays bitwise equal to standalone
+    runs, fires the bucket-complete watermark, and keeps a device-
+    count-invariant trace vocabulary.  The CI ``multi-device`` job runs
+    this under 4 forced host devices; on 1-device hosts it still pins
+    the unsharded invariants."""
+    from repro.launch.mesh import make_scoring_mesh
+
+    make = _world()
+    rt_solo = OperatorRuntime(backend="jnp")
+    prev = set_runtime(rt_solo)
+    try:
+        solo = [make(cam, kind).run(**kw) for cam, kind, kw in SMOKE]
+    finally:
+        set_runtime(prev)
+
+    mesh = make_scoring_mesh()
+    rt = OperatorRuntime(backend="jnp", mesh=mesh)
+    prev = set_runtime(rt)
+    try:
+        sched = FleetScheduler(contended=False, runtime=rt, mesh=mesh)
+        for i, (cam, kind, kw) in enumerate(SMOKE):
+            sched.add(f"m{i}", cam, make(cam, kind), **kw)
+        with TraceGuard(rt) as guard:
+            fleet = sched.run()
+    finally:
+        set_runtime(prev)
+
+    for i, standalone in enumerate(solo):
+        interleaved = fleet[f"m{i}"]
+        assert interleaved.points == standalone.points
+        assert interleaved.bytes_up == standalone.bytes_up
+        assert interleaved.done_t == standalone.done_t
+        assert interleaved.op_switches == standalone.op_switches
+
+    # mesh identity is reported; sharded iff the host has >1 device
+    n_dev = len(jax.devices())
+    assert sched.stats["device_count"] == n_dev
+    assert sched.stats["sharded"] == (mesh is not None) == (n_dev > 1)
+    assert sched.stats["mesh_shape"] == (
+        {"data": n_dev} if n_dev > 1 else None)
+
+    # watermark + overlap accounting: mixed-arch workload fires the
+    # bucket-complete watermark, and the overlap integrator engaged
+    fires = sched.stats["watermark_fires"]
+    assert sched.stats["eager_dispatches"] > 0
+    assert fires["bucket_complete"] > 0
+    assert sched.stats["overlap_host_s"] >= 0.0
+    assert sched.stats["result_block_s"] >= 0.0
+
+    # sharding must not grow the trace vocabulary (no per-shard traces)
+    vocab = rt.shape_vocab()
+    for s, n in guard.traces_per_arch.items():
+        assert n <= len(vocab[s]), f"{s}: {n} traces > {len(vocab[s])} shapes"
+
+
 def test_perf_smoke_small_path_threshold_is_live():
     """The adaptive threshold actually routes: a sub-threshold batch
     takes the lean layer, a super-threshold batch takes bucketing, on
