@@ -14,9 +14,10 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_fleet, bench_runtime, fig6_operators,
-                        fig9_queries, fig10_counting, fig11_traffic,
-                        fig12_ablation, fig13_landmarks, roofline)
+from benchmarks import (bench_fleet, bench_oracle, bench_runtime,
+                        fig6_operators, fig9_queries, fig10_counting,
+                        fig11_traffic, fig12_ablation, fig13_landmarks,
+                        roofline)
 
 FIGURES = {
     "fig6": fig6_operators.main,
@@ -28,6 +29,7 @@ FIGURES = {
     "roofline": roofline.main,
     "operator_runtime": bench_runtime.main,
     "fleet": bench_fleet.main,
+    "oracle": bench_oracle.main,
 }
 
 

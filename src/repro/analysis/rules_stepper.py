@@ -1,18 +1,19 @@
 """Stepper-purity rules: steppers talk to the world only via work items.
 
 ``core/stepper.py``'s contract: an executor stepper is a generator that
-yields ``ScoreDemand``/``UploadTick`` and receives answers via
-``send()``. That narrow waist is what lets the ``FleetScheduler``
-interleave N steppers, batch their scoring, and stretch their uplink
-ticks while staying bit-identical to standalone ``drive()`` runs
-(``tests/test_fleet.py``). A stepper that scores directly, mutates
-module globals, or does host I/O bypasses the waist: the fleet can no
-longer reorder or batch it without changing results.
+yields ``ScoreDemand``/``UploadTick``/``VerifyDemand`` and receives
+answers via ``send()``. That narrow waist is what lets the
+``FleetScheduler`` interleave N steppers, batch their scoring, stretch
+their uplink ticks, and route their verification through the shared
+``OracleService`` while staying bit-identical to standalone ``drive()``
+runs (``tests/test_fleet.py``). A stepper that scores or verifies
+directly, mutates module globals, or does host I/O bypasses the waist:
+the fleet can no longer reorder or batch it without changing results.
 
 Detection: a function is treated as a stepper iff it yields a direct
-``ScoreDemand(...)``/``UploadTick(...)`` call somewhere in its own
-scope (sub-steppers composed with ``yield from`` are visited as their
-own functions). Purity is enforced over the stepper's whole subtree,
+``ScoreDemand(...)``/``UploadTick(...)``/``VerifyDemand(...)`` call
+somewhere in its own scope (sub-steppers composed with ``yield from``
+are visited as their own functions). Purity is enforced over the stepper's whole subtree,
 nested helpers included — a closure that scores eagerly is just as
 impure as the generator itself.
 """
@@ -23,12 +24,17 @@ from typing import Iterator, List
 
 from repro.analysis.engine import ModuleInfo, Rule, Violation, register
 
-WORK_ITEMS = {"ScoreDemand", "UploadTick"}
+WORK_ITEMS = {"ScoreDemand", "UploadTick", "VerifyDemand"}
 
 # the scoring substrate a stepper must reach only via `yield ScoreDemand`
 SCORING_ATTRS = {"score", "score_crops", "score_demands"}
 SCORING_NAMES = {"get_runtime", "set_runtime", "OperatorRuntime",
                  "score_frames"}
+
+# cloud verification a stepper must reach only via `yield VerifyDemand`
+# (a direct call bypasses the shared OracleService's slot batching and
+# admission control, and pins the stepper to one env's answer path)
+VERIFY_ATTRS = {"cloud_verify"}
 
 IO_NAMES = {"open", "print", "input", "breakpoint", "exec", "eval",
             "compile"}
@@ -79,10 +85,12 @@ def steppers(mod: ModuleInfo) -> Iterator[ast.AST]:
 class StepperDirectScoringRule(Rule):
     id = "STP001"
     name = "stepper-direct-scoring"
-    invariant = ("steppers request inference via `yield ScoreDemand`; a "
-                 "direct OperatorRuntime/QuerySession.score call bypasses "
-                 "the FleetScheduler's cross-query batching and breaks "
-                 "the drive()-equivalence contract in core/stepper.py")
+    invariant = ("steppers request inference via `yield ScoreDemand` and "
+                 "cloud verification via `yield VerifyDemand`; a direct "
+                 "OperatorRuntime/QuerySession.score or env.cloud_verify "
+                 "call bypasses the FleetScheduler's cross-query batching "
+                 "(ScoreBatcher / OracleService) and breaks the drive()-"
+                 "equivalence contract in core/stepper.py")
 
     def check(self, mod: ModuleInfo) -> Iterator[Violation]:
         for fn in steppers(mod):
@@ -97,6 +105,14 @@ class StepperDirectScoringRule(Rule):
                         f"stepper `{fn.name}` calls `.{func.attr}(...)` "
                         "directly; yield a ScoreDemand and let the "
                         "driver answer it")
+                elif isinstance(func, ast.Attribute) and \
+                        func.attr in VERIFY_ATTRS:
+                    yield self.violation(
+                        mod, node,
+                        f"stepper `{fn.name}` calls `.{func.attr}(...)` "
+                        "directly; yield a VerifyDemand and let the "
+                        "driver (drive() or the shared OracleService) "
+                        "answer it")
                 else:
                     q = mod.qualname(func)
                     last = q.rsplit(".", 1)[-1] if q else ""

@@ -20,7 +20,7 @@ import numpy as np
 from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.session import QuerySession
-from repro.core.stepper import ScoreDemand, UploadTick, drive
+from repro.core.stepper import ScoreDemand, UploadTick, VerifyDemand, drive
 
 RECENT_WINDOW = 24
 QUALITY_TRIGGER = 0.35        # Manhattan-distance urgency threshold
@@ -110,7 +110,8 @@ class MaxCountExecutor:
                                           at=t_net)
                 prog.bytes_up += env.net.frame_bytes
                 uploaded.add(idx)
-                _, cloud_cnt = env.cloud_verify(idx)
+                _, cloud_cnt = yield VerifyDemand(idx, env.query.cls,
+                                                  at=t_net)
                 env.trainer.add_samples([idx], [cloud_cnt > 0], [cloud_cnt])
                 recent_cam.append(-c)
                 recent_cloud.append(cloud_cnt)
@@ -154,8 +155,9 @@ class SampleCountExecutor:
         self.sustain = sustain
 
     def run(self, max_uploads: Optional[int] = None) -> Progress:
-        """Drive ``steps`` standalone (no operator: no ScoreDemands)."""
-        return drive(self.steps(max_uploads))
+        """Drive ``steps`` standalone (no operator: no ScoreDemands;
+        verification answered synchronously through the env)."""
+        return drive(self.steps(max_uploads), env=self.env)
 
     def steps(self, max_uploads: Optional[int] = None,
               prog: Optional[Progress] = None):
@@ -201,7 +203,7 @@ class SampleCountExecutor:
             idx = int(frames[order[k % len(frames)]])
             t += yield UploadTick(1.0 / fps_net, env.net.frame_bytes, at=t)
             prog.bytes_up += env.net.frame_bytes
-            _, cnt = env.cloud_verify(idx)
+            _, cnt = yield VerifyDemand(idx, env.query.cls, at=t)
             samples.append(cnt)
             e = est()
             prog.record(t, max(0.0, 1.0 - rel_err(e)))

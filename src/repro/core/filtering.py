@@ -30,7 +30,7 @@ import numpy as np
 from repro.core import upgrade
 from repro.core.query import Progress, QueryEnv
 from repro.core.session import QuerySession
-from repro.core.stepper import ScoreDemand, UploadTick, drive
+from repro.core.stepper import ScoreDemand, UploadTick, VerifyDemand, drive
 
 LEVELS = (30, 10, 5, 2, 1)
 
@@ -84,7 +84,8 @@ class TaggingExecutor:
             t_net = start + (yield UploadTick(dt_net, env.net.frame_bytes,
                                               at=start))
             prog.bytes_up += env.net.frame_bytes
-            pos, cnt = env.cloud_verify(int(frames[i]))
+            pos, cnt = yield VerifyDemand(int(frames[i]), env.query.cls,
+                                          at=t_net)
             tags[i] = 4 if pos else 3
             env.trainer.add_samples([int(frames[i])], [pos], [cnt])
             return t_net

@@ -30,6 +30,20 @@ many of them:
     computation stays whole on one device), ``group_max`` rounded up
     to a multiple of the device count so full groups shard evenly.
 
+  * **Shared cloud verification.** Each ``VerifyDemand`` is stamped
+    with the query's identity and routed to a shared
+    ``serving/oracle_service.OracleService`` (continuous slot batching
+    + admission control).  The ticket may complete eagerly inside a
+    full slot, but the demanding stepper only resumes when its demand
+    is the earliest pending event — verifies order *before* ticks at
+    equal simulated time, which is exactly where the historical inline
+    ``env.cloud_verify`` call sat (immediately after the task's own
+    upload tick, before any later tick) — so the host order every
+    contention factor observes is unchanged and routed fleets stay
+    bit-identical to inline ones (``tests/test_oracle_service.py``).
+    ``oracle=False`` keeps the inline synchronous path as the bitwise
+    reference.
+
   * **Shared-uplink contention.** Each ``UploadTick`` is answered with
     ``seconds * factor`` where ``factor`` is the number of queries
     active on that camera at the tick's *simulated* start time (fair
@@ -61,7 +75,8 @@ from repro.core.query import Progress, QueryEnv
 from repro.core.ranking import RetrievalExecutor
 from repro.core.runtime import (ArchSig, OperatorRuntime, ScoreBatcher,
                                 ScoreHandle, arch_signature, get_runtime)
-from repro.core.stepper import ScoreDemand, UploadTick
+from repro.core.stepper import ScoreDemand, UploadTick, VerifyDemand
+from repro.serving.oracle_service import OracleService, VerifyTicket
 
 DEFAULT_GROUP_MAX = 8
 
@@ -104,12 +119,18 @@ class _Task:
     env: QueryEnv
     prog: Progress
     order: int = 0                # submission index (deterministic ties)
+    priority: int = 0             # OracleService admission class
+    weight: float = 1.0           # OracleService fair-share weight
+    slo_s: Optional[float] = None  # OracleService queueing-delay budget
     gen: object = None            # the stepper
     tick: Optional[UploadTick] = None      # pending, not yet answered
     demand: Optional[ScoreDemand] = None   # pending, not yet answered
+    vdemand: Optional[VerifyDemand] = None  # pending, not yet answered
+    vticket: Optional[VerifyTicket] = None  # in-flight service ticket
     handle: Optional[ScoreHandle] = None   # in-flight device results
     result: Optional[Progress] = None
     ticks: int = 0
+    verifies: int = 0
     sig: Optional[ArchSig] = None  # last demand's arch signature
     pot: bool = False              # counted as a potential contributor
     pot_key: Optional[ArchSig] = None      # key it is counted under
@@ -143,6 +164,12 @@ class FleetScheduler:
                       device-parallel ``OperatorRuntime`` for this
                       fleet when no explicit ``runtime`` is given.
     ``on_progress``   ``fn(qid, t, value)`` streamed per refinement.
+    ``oracle``        the shared verification service: an
+                      ``OracleService`` instance, ``None`` for a
+                      default (cached-answer) one, or ``False`` to
+                      answer every ``VerifyDemand`` inline and
+                      synchronously — the historical single-query path,
+                      kept as the bitwise reference for the routed one.
     ``runtime``       OperatorRuntime override (default: process-global,
                       so the whole fleet shares one jit cache; with
                       ``mesh``, a fleet-private sharded runtime).
@@ -153,9 +180,13 @@ class FleetScheduler:
                  cloud_ingress_bytes_per_s: Optional[float] = None,
                  group_max: Optional[int] = None,
                  mesh=None,
+                 oracle=None,
                  on_progress: Optional[Callable[[str, float, float],
                                                None]] = None):
         self._runtime = runtime
+        self.oracle: Optional[OracleService] = \
+            None if oracle is False else \
+            (oracle if oracle is not None else OracleService())
         self.mesh = mesh
         self.contended = contended
         self.cloud_ingress = cloud_ingress_bytes_per_s
@@ -178,11 +209,20 @@ class FleetScheduler:
     # -- fleet assembly -------------------------------------------------------
 
     def add(self, qid: str, camera: str, executor,
-            prog: Optional[Progress] = None, **step_kwargs) -> str:
+            prog: Optional[Progress] = None, *, priority: int = 0,
+            weight: float = 1.0, slo_s: Optional[float] = None,
+            **step_kwargs) -> str:
         """Enroll a query: ``executor`` must expose ``steps(prog=...)``;
         extra kwargs (``max_passes`` etc.) pass through to it. A caller
         holding a ``prog`` (e.g. FleetService handing it out at submit
-        time) may pass it in; otherwise one is created."""
+        time) may pass it in; otherwise one is created.
+
+        ``priority``/``weight``/``slo_s`` are the query's
+        ``OracleService`` admission parameters (verification urgency
+        class, fair-share weight, queueing-delay budget in simulated
+        seconds). They shape the service's slot admission only — never
+        the query's own clock — so they are free to vary without
+        perturbing results."""
         if any(t.qid == qid for t in self.tasks):
             raise ValueError(f"duplicate qid: {qid!r}")
         prog = prog if prog is not None else Progress()
@@ -190,8 +230,12 @@ class FleetScheduler:
             prog.subscribe(
                 lambda t, v, qid=qid: self.on_progress(qid, t, v))
         task = _Task(qid, camera, executor, executor.env, prog,
-                     order=len(self.tasks))
+                     order=len(self.tasks), priority=priority,
+                     weight=weight, slo_s=slo_s)
         task.gen = executor.steps(prog=prog, **step_kwargs)
+        if self.oracle is not None:
+            self.oracle.register(qid, executor.env, priority=priority,
+                                 weight=weight, slo_s=slo_s)
         self.tasks.append(task)
         return qid
 
@@ -242,18 +286,34 @@ class FleetScheduler:
 
     def _step(self, task: _Task, resp) -> None:
         """Resume one stepper by one work item; park the item on the
-        task (``tick``/``demand``) or record its final Progress."""
-        task.tick = task.demand = None
-        try:
-            item = task.gen.send(resp)
-        except StopIteration as e:
-            task.result = e.value
-            return
-        if isinstance(item, UploadTick):
-            task.tick = item
-        elif isinstance(item, ScoreDemand):
-            task.demand = item
-        else:
+        task (``tick``/``demand``/``vdemand``) or record its final
+        Progress.  VerifyDemands are stamped with the task's fleet
+        identity; with a shared ``OracleService`` the demand parks and
+        its ticket enters the service (eager slot batching), without
+        one it is answered inline and synchronously — the historical
+        single-query path."""
+        task.tick = task.demand = task.vdemand = None
+        while True:
+            try:
+                item = task.gen.send(resp)
+            except StopIteration as e:
+                task.result = e.value
+                return
+            if isinstance(item, UploadTick):
+                task.tick = item
+                return
+            if isinstance(item, ScoreDemand):
+                task.demand = item
+                return
+            if isinstance(item, VerifyDemand):
+                item.qid, item.priority = task.qid, task.priority
+                task.verifies += 1
+                if self.oracle is None:
+                    resp = task.env.cloud_verify(item.idx)
+                    continue
+                task.vdemand = item
+                task.vticket = self.oracle.submit(item)
+                return
             raise TypeError(f"unknown work item from {task.qid}: {item!r}")
 
     # -- bucket-complete watermark census -------------------------------------
@@ -331,23 +391,47 @@ class FleetScheduler:
         for task in self.tasks:
             self._advance(task, None, batcher)
             batcher.fire_complete(self._possible_sigs())
+        def event_key(t: _Task):
+            # earliest simulated event first; a verification orders
+            # *before* a transfer at the same instant — the inline call
+            # it replaces ran within the serving of the tick that
+            # produced it, i.e. before any tick at (or after) the
+            # verify's own simulated time, and a finished query's
+            # ``done_t == at`` tie in ``_active_at`` observes the
+            # difference
+            if t.vdemand is not None:
+                return (t.vdemand.at, 0, t.order)
+            return (t.tick.at, 1, t.order)
+
         while True:
-            # earliest pending transfer across the fleet first
-            ticking = [t for t in self.tasks if t.tick is not None]
-            if ticking:
-                task = min(ticking, key=lambda t: (t.tick.at, t.order))
-                item = task.tick
-                task.ticks += 1
+            # earliest pending transfer/verification across the fleet
+            # first (global simulated-time order)
+            events = [t for t in self.tasks
+                      if t.tick is not None or t.vdemand is not None]
+            if events:
+                task = min(events, key=event_key)
                 t0 = time.perf_counter() if batcher.in_flight else None
-                self._advance(task, item.seconds *
-                              self._uplink_factor(task, item.at), batcher)
+                if task.vdemand is not None:
+                    # the demand's simulated position is due: force its
+                    # slot through the service (it may already have
+                    # completed eagerly inside a full slot) and resume
+                    ticket, task.vticket = task.vticket, None
+                    self._advance(task, self.oracle.complete(ticket),
+                                  batcher)
+                else:
+                    item = task.tick
+                    task.ticks += 1
+                    self._advance(task, item.seconds *
+                                  self._uplink_factor(task, item.at),
+                                  batcher)
                 batcher.fire_complete(self._possible_sigs())
                 if t0 is not None:
                     overlap_s += time.perf_counter() - t0
                 continue
-            # no transfers in flight (the no-ticks-pending watermark):
-            # flush partial groups, then resume every score-blocked
-            # stepper in task order from its on-device results
+            # no transfers or verifications in flight (the no-ticks-
+            # pending watermark): flush partial groups, then resume
+            # every score-blocked stepper in task order from its
+            # on-device results
             blocked = [t for t in self.tasks if t.demand is not None]
             if not blocked:
                 break
@@ -377,8 +461,11 @@ class FleetScheduler:
             "watermark_fires": dict(batcher.watermark_fires),
             "frames_scored": rt.frames_scored - frames0,
             "upload_ticks": sum(t.ticks for t in self.tasks),
+            "verify_demands": sum(t.verifies for t in self.tasks),
             "overlap_host_s": round(overlap_s, 4),
             "result_block_s": round(block_s, 4),
+            "oracle": self.oracle.stats() if self.oracle is not None
+            else None,
             **rt.mesh_info(),
         }
         return {t.qid: t.result for t in self.tasks}

@@ -27,7 +27,7 @@ from repro.core.query import Progress, QueryEnv
 from repro.core.queue import AsyncUploadQueue
 from repro.core.session import QuerySession
 from repro.core.skew import rank_spans
-from repro.core.stepper import ScoreDemand, UploadTick, drive
+from repro.core.stepper import ScoreDemand, UploadTick, VerifyDemand, drive
 
 RECENT_WINDOW = 30
 
@@ -80,11 +80,14 @@ class RetrievalExecutor:
         q = AsyncUploadQueue()
         found = 0
 
-        def verify_upload(idx: int, t_up: float) -> None:
+        def verify_upload(idx: int, t_up: float):
+            """Sub-stepper (``yield from``): cloud verification of one
+            upload, answered by the driver (synchronously under
+            ``drive``, via the shared OracleService under a fleet)."""
             nonlocal found
             prog.bytes_up += env.net.frame_bytes
             q.mark_uploaded(idx)
-            pos, cnt = env.cloud_verify(idx)
+            pos, cnt = yield VerifyDemand(int(idx), env.query.cls, at=t_up)
             env.trainer.add_samples([idx], [pos], [cnt])
             if pos:
                 found += 1
@@ -101,7 +104,7 @@ class RetrievalExecutor:
             if q.uploaded(idx):
                 continue
             t += yield UploadTick(dt_net, env.net.frame_bytes, at=t)
-            verify_upload(idx, t)
+            yield from verify_upload(idx, t)
 
         # 4. multipass ranking
         t_cam = t_net = arrive
@@ -137,7 +140,7 @@ class RetrievalExecutor:
                     continue
                 t_net += yield UploadTick(dt_net, env.net.frame_bytes,
                                           at=t_net)
-                verify_upload(idx, t_net)
+                yield from verify_upload(idx, t_net)
                 recent.append(env.is_positive(idx))
                 # ---- cloud upgrade policy (k-rule trigger, §6.1-2) ----
                 if len(recent) >= RECENT_WINDOW:
@@ -217,7 +220,7 @@ class RetrievalExecutor:
                 continue
             t_net += yield UploadTick(dt_net, env.net.frame_bytes,
                                       at=t_net)
-            verify_upload(idx, t_net)
+            yield from verify_upload(idx, t_net)
         for idx in frames:
             if found >= n_pos:
                 break
@@ -225,6 +228,6 @@ class RetrievalExecutor:
                 continue
             t_net += yield UploadTick(dt_net, env.net.frame_bytes,
                                       at=t_net)
-            verify_upload(int(idx), t_net)
+            yield from verify_upload(int(idx), t_net)
         prog.done_t = t_net
         return prog

@@ -28,7 +28,7 @@ from repro.core import factory, flow, landmarks as lm_mod, upgrade
 from repro.core.factory import ProfiledOp
 from repro.core.query import Progress, QueryEnv
 from repro.core.runtime import OperatorRuntime, get_runtime
-from repro.core.stepper import UploadTick, drive
+from repro.core.stepper import UploadTick, VerifyDemand, drive
 from repro.core.training import TrainedOp
 
 
@@ -68,10 +68,10 @@ class QuerySession:
     # -- bootstrap (§5.2, §8.4) ----------------------------------------------
 
     def bootstrap(self, prog: Progress) -> "QuerySession":
-        """Eager ``bootstrap_steps``: uncontended uplink (baselines and
-        pre-fleet callers). Advances ``self.t`` and charges
-        ``prog.bytes_up``."""
-        return drive(self.bootstrap_steps(prog))
+        """Eager ``bootstrap_steps``: uncontended uplink, synchronous
+        cloud verification (baselines and pre-fleet callers). Advances
+        ``self.t`` and charges ``prog.bytes_up``."""
+        return drive(self.bootstrap_steps(prog), env=self.env)
 
     def bootstrap_steps(self, prog: Progress):
         """Pull landmarks, seed the training pool, derive long-term
@@ -105,7 +105,8 @@ class QuerySession:
                 self.t += yield UploadTick(self.dt_net, env.net.frame_bytes,
                                            at=self.t)
                 prog.bytes_up += env.net.frame_bytes
-                pos, cnt = env.cloud_verify(int(idx))
+                pos, cnt = yield VerifyDemand(int(idx), env.query.cls,
+                                              at=self.t)
                 env.trainer.add_samples([int(idx)], [pos], [cnt])
 
         # 3. long-term knowledge: spatial skew + temporal density

@@ -29,6 +29,7 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False      # hit the KV ring before max_new tokens
 
 
 class ServeEngine:
@@ -39,20 +40,41 @@ class ServeEngine:
         self.slots = slots
         self.cache_len = cache_len
         self.temperature = temperature
-        self.rng = jax.random.PRNGKey(seed)
+        # base key only: sampling keys derive per (request, step) via
+        # fold_in, so a request's tokens are a function of the request
+        # alone — independent of which other requests share the batch
+        self._base_key = jax.random.PRNGKey(seed)
         self.caches = transformer.init_caches(cfg, slots, cache_len)
         self.active: Dict[int, Optional[Request]] = {i: None
                                                      for i in range(slots)}
         self.pos = np.zeros(slots, np.int64)
         self.queue: List[Request] = []
+        self.requests: Dict[int, Request] = {}   # rid -> Request, all ever
+        self._next_rid = 1000
         self._decode = jax.jit(
             lambda p, c, tok, pos: transformer.decode_step(cfg, p, c, tok, pos))
 
     # -- API -----------------------------------------------------------------
 
     def submit(self, prompt, max_new: int, rid: Optional[int] = None) -> int:
-        rid = rid if rid is not None else len(self.queue) + 1000
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or len(prompt) == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) >= self.cache_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} must leave KV-ring room "
+                f"(cache_len={self.cache_len}) for generation")
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        elif rid in self.requests:
+            raise ValueError(f"duplicate rid: {rid}")
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = Request(rid, prompt, max_new)
+        self.queue.append(req)
+        self.requests[rid] = req
         return rid
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
@@ -106,15 +128,22 @@ class ServeEngine:
                     src = src[:, :, -tgt.shape[2]:]
             return tgt.at[:, slot:slot + 1].set(src.astype(tgt.dtype))
         self.caches = jax.tree_util.tree_map(splice, self.caches, caches)
-        self.pos[slot] = S
-        req.out.append(int(self._sample(first_logits)[0]))
+        # submit() guarantees S < cache_len; the clamp keeps the ring
+        # write position in-range even for subclasses that relax it
+        self.pos[slot] = min(S, self.cache_len - 1)
+        req.out.append(self._sample_one(first_logits[0, -1, :], req))
 
-    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+    def _sample_one(self, logits: jnp.ndarray, req: Request) -> int:
+        """Sample one token for ``req`` from its own ``(V,)`` logits row.
+        The key is ``fold_in(fold_in(base, rid), step)`` — a pure
+        function of the request and its generation step, so co-batched
+        requests draw identical tokens to the same request running
+        alone (the continuous-batching invariant; see test_serving)."""
         if self.temperature <= 0:
-            return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-        self.rng, k = jax.random.split(self.rng)
-        return np.asarray(jax.random.categorical(
-            k, logits[:, -1, :] / self.temperature))
+            return int(jnp.argmax(logits))
+        k = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.rid), len(req.out))
+        return int(jax.random.categorical(k, logits / self.temperature))
 
     def _tick(self, results: Dict[int, List[int]]) -> None:
         last = np.zeros((self.slots, 1), np.int32)
@@ -124,13 +153,16 @@ class ServeEngine:
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(last),
             jnp.asarray(self.pos, jnp.int32))
-        nxt = self._sample(logits)
         for slot, r in list(self.active.items()):
             if r is None:
                 continue
-            r.out.append(int(nxt[slot]))
+            r.out.append(self._sample_one(logits[slot, -1, :], r))
             self.pos[slot] += 1
             if len(r.out) >= r.max_new or self.pos[slot] >= self.cache_len:
                 r.done = True
+                # the ring ran out before the token budget: the output
+                # is complete-as-generated but shorter than asked — say
+                # so instead of silently freeing the slot
+                r.truncated = len(r.out) < r.max_new
                 results[r.rid] = r.out
                 self.active[slot] = None     # slot freed immediately

@@ -35,12 +35,15 @@ class FleetService:
                  cloud_ingress_bytes_per_s: Optional[float] = None,
                  group_max: Optional[int] = None,
                  full_family: bool = False,
-                 train_steps: int = 150, mesh=None):
+                 train_steps: int = 150, mesh=None, oracle=None):
         self.contended = contended
         self.cloud_ingress = cloud_ingress_bytes_per_s
         # None defers to the scheduler's device-aware default; see
         # core/fleet.device_aware_group_max
         self.group_max = group_max
+        # shared verification front end (see core/fleet.FleetScheduler:
+        # an OracleService, None for the default, False for inline)
+        self.oracle = oracle
         self.mesh = mesh
         self.full_family = full_family
         self.train_steps = train_steps
@@ -67,11 +70,15 @@ class FleetService:
     # -- query intake ---------------------------------------------------------
 
     def submit(self, camera: str, query: Query, *, net=None,
-               qid: Optional[str] = None, **step_kwargs) -> str:
+               qid: Optional[str] = None, priority: int = 0,
+               weight: float = 1.0, slo_s: Optional[float] = None,
+               **step_kwargs) -> str:
         """Queue a query against ``camera``; returns its qid.
         ``step_kwargs`` (``max_passes``, ``levels``, …) pass to the
         executor's stepper. The query's (initially empty) ``Progress``
-        is available from ``progress(qid)`` immediately."""
+        is available from ``progress(qid)`` immediately.
+        ``priority``/``weight``/``slo_s`` are the query's verification
+        admission parameters (see ``FleetScheduler.add``)."""
         if camera not in self._cameras:
             raise KeyError(f"unknown camera: {camera!r}")
         qid = qid or f"q{self._n_submitted}-{camera}-{query.kind}"
@@ -83,6 +90,7 @@ class FleetService:
         executor = make_executor(env, full_family=self.full_family)
         self._n_submitted += 1
         self._progress[qid] = Progress()
+        step_kwargs.update(priority=priority, weight=weight, slo_s=slo_s)
         self._submissions.append((qid, camera, executor, step_kwargs))
         return qid
 
@@ -97,7 +105,7 @@ class FleetService:
             contended=self.contended,
             cloud_ingress_bytes_per_s=self.cloud_ingress,
             group_max=self.group_max, mesh=self.mesh,
-            on_progress=on_progress)
+            oracle=self.oracle, on_progress=on_progress)
         for qid, camera, executor, kw in self._submissions:
             sched.add(qid, camera, executor, prog=self._progress[qid],
                       **kw)

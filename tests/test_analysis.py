@@ -62,6 +62,17 @@ FIXTURES = [
      "from repro.core.runtime import get_runtime\n\n"
      "def plain(trained, bank, idxs):\n"
      "    return get_runtime().score(trained, bank, idxs)\n"),
+    ("STP001",  # inline cloud verification from a stepper — must route
+     # through `yield VerifyDemand` so the fleet's shared OracleService
+     # can batch it (a VerifyDemand yield alone marks the fn a stepper)
+     "from repro.core.stepper import UploadTick, VerifyDemand\n\n"
+     "def upload(env, idx, t):\n"
+     "    t += yield UploadTick(1.0, 1e6, at=t)\n"
+     "    pos, cnt = env.cloud_verify(idx)\n",
+     "from repro.core.stepper import UploadTick, VerifyDemand\n\n"
+     "def upload(env, idx, t):\n"
+     "    t += yield UploadTick(1.0, 1e6, at=t)\n"
+     "    pos, cnt = yield VerifyDemand(idx, 'car', at=t)\n"),
     ("STP002",
      "from repro.core.stepper import UploadTick\n\nN = 0\n\n"
      "def upload(nbytes):\n    global N\n    N += 1\n"

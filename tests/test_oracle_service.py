@@ -1,0 +1,210 @@
+"""OracleService: routed fleet verification is bitwise-identical to the
+historical inline ``env.cloud_verify`` path (contended and uncontended),
+detect-mode answers match the cached ground truth, and slot admission
+(priority / weighted fair share / SLO deadlines) orders deterministically
+in simulated time without starving any lane."""
+import pytest
+
+from repro.core import landmarks as lm_mod
+from repro.core.fleet import FleetScheduler, make_executor
+from repro.core.hardware import YOLO_V3
+from repro.core.query import Query, make_env
+from repro.core.runtime import OperatorRuntime, set_runtime
+from repro.core.stepper import VerifyDemand
+from repro.core.training import FrameBank
+from repro.core.video import QUERY_CLASS, Video, corpus
+from repro.serving.oracle_service import OracleService
+
+CAMERAS = ("Banff", "Miami")
+
+# verify-heavy mix: retrieval uploads + verifies every frame it sends;
+# the two sampling counters are pure UploadTick/VerifyDemand traffic
+WORKLOAD = [
+    ("Banff", "retrieval", {"max_passes": 2}),
+    ("Banff", "count_avg", {}),
+    ("Miami", "count_median", {}),
+]
+
+
+@pytest.fixture(scope="module")
+def world():
+    videos = {n: Video(corpus(hours=0.25)[n]) for n in CAMERAS}
+    stores = {n: lm_mod.build_landmarks(v, 30, YOLO_V3)
+              for n, v in videos.items()}
+    banks = {n: FrameBank(v) for n, v in videos.items()}
+    return videos, stores, banks
+
+
+def _executor(world, cam, kind):
+    videos, stores, banks = world
+    env = make_env(videos[cam], Query(kind, QUERY_CLASS[cam]),
+                   stores[cam], bank=banks[cam], train_steps=30)
+    return make_executor(env, full_family=False)
+
+
+def _run_fleet(world, *, oracle, contended):
+    prev = set_runtime(OperatorRuntime(backend="jnp"))
+    try:
+        sched = FleetScheduler(contended=contended, oracle=oracle)
+        for i, (cam, kind, kw) in enumerate(WORKLOAD):
+            # admission parameters vary per query on the routed runs to
+            # prove they shape service accounting only, never results
+            sched.add(f"q{i}", cam, _executor(world, cam, kind),
+                      priority=i % 2, weight=1.0 + i,
+                      slo_s=None if i else 5.0, **kw)
+        return sched.run(), sched
+    finally:
+        set_runtime(prev)
+
+
+@pytest.fixture(scope="module")
+def inline_vs_routed(world):
+    runs = {}
+    for contended in (False, True):
+        inline, _ = _run_fleet(world, oracle=False, contended=contended)
+        routed, sched = _run_fleet(world, oracle=None, contended=contended)
+        runs[contended] = (inline, routed, sched)
+    return runs
+
+
+@pytest.mark.parametrize("contended", [False, True])
+def test_routed_fleet_bitwise_equals_inline(inline_vs_routed, contended):
+    """Acceptance: routing every VerifyDemand through the shared
+    OracleService leaves each query's Progress bit-identical to the
+    pre-service inline path — verification answers are pure functions
+    of the frame, and the scheduler resumes each demanding stepper at
+    the demand's simulated-time position."""
+    inline, routed, _ = inline_vs_routed[contended]
+    assert set(inline) == set(routed) == {f"q{i}"
+                                          for i in range(len(WORKLOAD))}
+    for qid in inline:
+        assert routed[qid].points == inline[qid].points
+        assert routed[qid].bytes_up == inline[qid].bytes_up
+        assert routed[qid].done_t == inline[qid].done_t
+        assert routed[qid].op_switches == inline[qid].op_switches
+
+
+def test_routed_fleet_accounts_every_verification(inline_vs_routed):
+    """Every demand the steppers raised went through the service, and
+    the per-priority queueing-delay stats cover all of them."""
+    _, _, sched = inline_vs_routed[True]
+    st = sched.stats
+    assert st["verify_demands"] > 0
+    oracle = st["oracle"]
+    assert oracle["frames_verified"] == st["verify_demands"]
+    assert oracle["slots"] > 0
+    assert 1 <= oracle["occupancy_mean"] <= oracle["slot_frames"]
+    delayed = sum(d["n"] for d in oracle["queue_delay_s"].values())
+    assert delayed == st["verify_demands"]
+    assert set(oracle["per_qid"]) == {f"q{i}"
+                                      for i in range(len(WORKLOAD))}
+
+
+def test_detect_mode_matches_cached_ground_truth(world):
+    """compute="detect" re-runs the oracle detector instead of reading
+    the env's precomputed arrays — bit-identical answers (same seeded
+    detector), with shared frames deduplicated to one detector run."""
+    videos, stores, banks = world
+    env = make_env(videos["Banff"], Query("retrieval",
+                                          QUERY_CLASS["Banff"]),
+                   stores["Banff"], bank=banks["Banff"], train_steps=30)
+    env2 = make_env(videos["Banff"], Query("count_max",
+                                           QUERY_CLASS["Banff"]),
+                    stores["Banff"], bank=banks["Banff"], train_steps=30)
+    svc = OracleService(slot_frames=4, compute="detect", eager=False)
+    svc.register("a", env)
+    svc.register("b", env2)
+    idxs = [int(i) for i in env.frames[:6]]
+    tickets = [svc.submit(VerifyDemand(i, env.query.cls, at=0.0, qid="a"))
+               for i in idxs]
+    # a second query demands three of the same physical frames
+    dups = [svc.submit(VerifyDemand(i, env2.query.cls, at=0.0, qid="b"))
+            for i in idxs[:3]]
+    svc.flush()
+    for i, t in zip(idxs, tickets):
+        assert t.result() == env.cloud_verify(i)
+    for i, t in zip(idxs[:3], dups):
+        assert t.result() == env2.cloud_verify(i)
+    st = svc.stats()
+    assert st["detect_calls"] == len(idxs)
+    assert st["dedup_hits"] == 3
+    assert st["frames_verified"] == len(idxs) + 3
+
+
+class _StubEnv:
+    def cloud_verify(self, idx):
+        return (idx % 2 == 0, idx % 3)
+
+
+def test_priority_orders_slot_admission():
+    """Higher-priority lanes fill slots first; ties break by arrival."""
+    svc = OracleService(slot_frames=4, eager=False)
+    env = _StubEnv()
+    svc.register("lo", env, priority=0)
+    svc.register("hi", env, priority=5)
+    lo = [svc.submit(VerifyDemand(i, "car", at=0.0, qid="lo"))
+          for i in range(4)]
+    hi = [svc.submit(VerifyDemand(i, "car", at=0.0, qid="hi"))
+          for i in range(4)]
+    first = svc.step()
+    assert [t.demand.qid for t in first] == ["hi"] * 4
+    second = svc.step()
+    assert [t.demand.qid for t in second] == ["lo"] * 4
+    assert all(t.done for t in lo + hi)
+    assert lo[0].result() == env.cloud_verify(0)
+
+
+def test_weighted_fair_share_prevents_starvation():
+    """A flooding lane cannot monopolize slots: a light lane submitting
+    later is admitted within the next slot (WFQ virtual finish times),
+    not after the flood drains."""
+    svc = OracleService(slot_frames=4, eager=False)
+    env = _StubEnv()
+    svc.register("heavy", env, weight=1.0)
+    svc.register("light", env, weight=1.0)
+    for i in range(12):
+        svc.submit(VerifyDemand(i, "car", at=0.0, qid="heavy"))
+    svc.step()                          # 4 heavy served, vclock advances
+    light = [svc.submit(VerifyDemand(i, "car", at=0.0, qid="light"))
+             for i in range(2)]
+    nxt = svc.step()
+    assert {t.demand.qid for t in nxt} == {"heavy", "light"}
+    assert all(t.done for t in light)
+    svc.flush()
+    st = svc.stats()
+    assert st["per_qid"]["light"]["max_slots_waited"] <= 1
+    assert st["per_qid"]["heavy"]["served"] == 12
+
+
+def test_slo_deadline_preempts_priority():
+    """An overdue lane (simulated queueing delay past its slo_s budget)
+    preempts even higher-priority pending demands."""
+    svc = OracleService(slot_frames=2, det_fps=10.0, eager=False)
+    env = _StubEnv()
+    svc.register("urgent", env, priority=0, slo_s=0.0)
+    svc.register("vip", env, priority=9)
+    for i in range(4):
+        svc.submit(VerifyDemand(i, "car", at=0.0, qid="vip"))
+    svc.submit(VerifyDemand(99, "car", at=0.0, qid="urgent"))
+    first = svc.step()
+    assert "urgent" in {t.demand.qid for t in first}
+    svc.flush()
+    st = svc.stats()
+    # delays advance on the simulated detector clock, per priority class
+    assert st["queue_delay_s"][9]["max"] > 0.0
+    assert st["overdue_bumped"] >= 0
+
+
+def test_eager_slot_fires_at_capacity():
+    """Continuous batching: submissions trigger a slot the moment one
+    fills; earlier tickets complete while later ones keep queueing."""
+    svc = OracleService(slot_frames=3)
+    env = _StubEnv()
+    svc.register("q", env)
+    tickets = [svc.submit(VerifyDemand(i, "car", at=0.0, qid="q"))
+               for i in range(7)]
+    assert [t.done for t in tickets] == [True] * 6 + [False]
+    assert svc.stats()["occupancy_mean"] == 3.0
+    assert svc.complete(tickets[-1]) == env.cloud_verify(6)
+    with pytest.raises(ValueError, match="not registered"):
+        svc.submit(VerifyDemand(0, "car", qid="nope"))

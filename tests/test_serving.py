@@ -74,3 +74,71 @@ def test_engine_slot_reuse(small_lm):
     # deterministic: same prompt, same params -> same continuation
     outs = [tuple(results[r]) for r in rids]
     assert len(set(outs)) == 1
+
+
+def test_engine_rids_unique_across_runs(small_lm):
+    """Regression: rids were derived from the queue length, so a later
+    submission after the queue drained reused an earlier rid and its
+    result overwrote the first request's."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=2, cache_len=64)
+    first = eng.submit(np.array([5, 9, 2], np.int32), max_new=2)
+    res1 = eng.run()
+    second = eng.submit(np.array([3, 3, 8], np.int32), max_new=2)
+    res2 = eng.run()
+    assert first != second
+    assert first in res1 and second in res2
+    assert second not in res1
+    # explicit rids still work, but colliding with a seen one is an error
+    third = eng.submit(np.array([1], np.int32), max_new=1, rid=7)
+    assert third == 7
+    with pytest.raises(ValueError, match="duplicate rid"):
+        eng.submit(np.array([1], np.int32), max_new=1, rid=first)
+
+
+def test_engine_length_edges(small_lm):
+    """Regression: max_new=0 still emitted one token from the prefill
+    logits, and a prompt filling the whole KV ring spliced cropped cache
+    rows with the write position past the ring."""
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, slots=2, cache_len=64)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(np.array([1, 2, 3], np.int32), max_new=0)
+    with pytest.raises(ValueError, match="KV-ring"):
+        eng.submit(np.arange(64) % cfg.vocab_size, max_new=2)
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.array([], np.int32), max_new=2)
+    # a valid request that hits the ring end before its token budget is
+    # surfaced as truncated, not silently shortened
+    rid = eng.submit(np.arange(60) % cfg.vocab_size, max_new=16)
+    out = eng.run()[rid]
+    req = eng.requests[rid]
+    assert req.done and req.truncated
+    assert 0 < len(out) < 16
+    # an untruncated request says so
+    rid2 = eng.submit(np.array([1, 2, 3], np.int32), max_new=2)
+    assert len(eng.run()[rid2]) == 2
+    assert not eng.requests[rid2].truncated
+
+
+def test_engine_sampling_independent_of_cobatching(small_lm):
+    """Regression: temperature>0 drew one categorical over all slots
+    from a shared rng chain, so a request's sampled tokens depended on
+    which other requests shared the engine. Per-(request, step) fold_in
+    keys make the draw a function of the request alone."""
+    cfg, params = small_lm
+    p1 = np.array([5, 9, 2, 7, 1], np.int32)
+    p2 = np.array([3, 3, 8], np.int32)
+    solo = ServeEngine(cfg, params, slots=2, cache_len=64,
+                       temperature=0.8, seed=11)
+    rs = solo.submit(p1, max_new=6, rid=42)
+    want = solo.run()[rs]
+    multi = ServeEngine(cfg, params, slots=2, cache_len=64,
+                        temperature=0.8, seed=11)
+    ra = multi.submit(p1, max_new=6, rid=42)
+    multi.submit(p2, max_new=3)
+    multi.submit(p2, max_new=5)
+    got = multi.run()
+    assert got[ra] == want
+    # and the draw is genuinely stochastic across steps, not argmax
+    assert len(set(want)) > 1 or len(want) < 2
